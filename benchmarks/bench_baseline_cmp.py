@@ -1,0 +1,51 @@
+"""Paper §7.3 / Fig. 9b + Fig. 10: Minos vs the Guerreiro et al. mean-power
+classifier under the identical hold-one-out protocol."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import (RESULTS, emit, holdout_power_error,
+                               reference_library, unique_workloads)
+from repro.core import MinosClassifier
+from repro.core.baselines import mean_power_neighbor, util_only_neighbor
+
+
+def run() -> dict:
+    t0 = time.time()
+    uniq = unique_workloads(reference_library())
+    clf = MinosClassifier(uniq)
+    rows = []
+    for target in uniq:
+        nn_minos, _ = clf.power_neighbor(target)
+        nn_mean, _ = mean_power_neighbor(target, uniq)
+        nn_util, _ = util_only_neighbor(target, uniq)
+        rec = {"target": target.name}
+        for tag, nn in (("minos", nn_minos), ("guerreiro", nn_mean),
+                        ("util_only", nn_util)):
+            for q in ("p90", "p95", "p99"):
+                err, _, _ = holdout_power_error(target, nn, q)
+                rec[f"{tag}_{q}"] = round(err, 4)
+            rec[f"{tag}_nn"] = nn.name
+        rows.append(rec)
+    means = {}
+    for tag in ("minos", "guerreiro", "util_only"):
+        for q in ("p90", "p95", "p99"):
+            means[f"{tag}_{q}"] = round(float(np.mean(
+                [r[f"{tag}_{q}"] for r in rows])), 4)
+    out = {"rows": rows, "means": means}
+    with open(os.path.join(RESULTS, "baseline_cmp.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    emit("baseline_cmp_fig9b_fig10", (time.time() - t0) * 1e6,
+         f"minos_p90={means['minos_p90']:.3f};"
+         f"guerreiro_p90={means['guerreiro_p90']:.3f};"
+         f"util_only_p90={means['util_only_p90']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    o = run()
+    print(o["means"])

@@ -1,0 +1,40 @@
+"""Paper §7.4 / Fig. 12: bin-size sensitivity of p90 prediction error,
+normalized to bin size 0.1."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, reference_library, unique_workloads
+from repro.core import MinosClassifier
+
+BIN_SIZES = (0.05, 0.1, 0.15, 0.2, 0.25, 0.5, 0.75)
+
+
+def run() -> dict:
+    t0 = time.time()
+    uniq = unique_workloads(reference_library())
+    clf = MinosClassifier(uniq)
+    errs = {}
+    for c in BIN_SIZES:
+        per = []
+        for target in uniq:
+            nn, _ = clf.power_neighbor(target, bin_size=c)
+            per.append(abs(target.p_quantile(90) - nn.p_quantile(90)))
+        errs[c] = float(np.mean(per))
+    base = errs[0.1] or 1e-9
+    norm = {str(c): round(errs[c] / base, 3) for c in BIN_SIZES}
+    out = {"raw": {str(c): round(v, 4) for c, v in errs.items()},
+           "normalized_to_0.1": norm}
+    with open(os.path.join(RESULTS, "binsize.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    emit("binsize_fig12", (time.time() - t0) * 1e6,
+         ";".join(f"c{c}={norm[str(c)]}" for c in BIN_SIZES))
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,77 @@
+"""Paper Fig. 3 (power dendrogram) + Fig. 4 (utilization K-Means) + Table 1
+class columns."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, reference_library
+from repro.core import MinosClassifier
+from repro.core.clustering import dendrogram_order
+
+
+def _ascii_dendrogram(names, Z, labels) -> str:
+    order = dendrogram_order(Z)
+    lines = ["power-spike dendrogram (ward/cosine), leaves in merge order:"]
+    for i in order:
+        lines.append(f"  [{labels[i]}] {names[i]}")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    t0 = time.time()
+    refs = reference_library()
+    clf = MinosClassifier(refs)
+    names = [r.name for r in refs]
+
+    Z = clf.power_linkage()
+    power_labels = clf.power_classes(k=3)
+    # interpret clusters: order by mean p90 -> Low / Mixed / High
+    means = {}
+    for c in set(power_labels):
+        members = [refs[i] for i in range(len(refs)) if power_labels[i] == c]
+        means[c] = np.mean([m.p_quantile(90) for m in members])
+    rank = {c: i for i, c in enumerate(sorted(means, key=means.get))}
+    tags = ["Low-spike", "Mixed", "High-spike"]
+    power_class = {n: tags[rank[c]] for n, c in zip(names, power_labels)}
+
+    util_labels, centers, k_best, sil_scores = clf.util_classes()
+    cmeans = {c: centers[c][1] - centers[c][0] for c in range(k_best)}  # sm - dram
+    crank = {c: i for i, c in enumerate(sorted(cmeans, key=cmeans.get))}
+    utags = ["M", "H", "C"] if k_best == 3 else [f"U{i}" for i in range(k_best)]
+    util_class = {n: utags[crank[c]] if k_best == 3 else utags[crank[c]]
+                  for n, c in zip(names, util_labels)}
+
+    rows = []
+    for r in refs:
+        rows.append({
+            "workload": r.name, "domain": r.domain,
+            "pwr_class": power_class[r.name], "util_class": util_class[r.name],
+            "p90": round(r.p_quantile(90), 3), "mean": round(r.mean_power, 3),
+            "sm_util": round(r.sm_util, 3), "dram_util": round(r.dram_util, 3),
+        })
+    out = {
+        "table1": rows,
+        "silhouette_by_k": {str(k): round(v, 4) for k, v in (sil_scores or {}).items()},
+        "k_best": k_best,
+        "dendrogram": _ascii_dendrogram(names, Z, [power_class[n][0] for n in names]),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "classification.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+    n_classes = len(set(power_class.values()))
+    emit("classification_fig3_fig4", (time.time() - t0) * 1e6,
+         f"pwr_classes={n_classes};k_util={k_best};"
+         f"sil={max((sil_scores or {1: 0}).values()):.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    o = run()
+    print(o["dendrogram"])
+    for r in o["table1"]:
+        print(r)

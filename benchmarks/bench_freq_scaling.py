@@ -1,0 +1,39 @@
+"""Paper Fig. 7: performance scaling with frequency caps per utilization
+class (C/M/H)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, reference_library
+from repro.analysis.hardware import FREQ_SWEEP
+
+
+def run() -> dict:
+    t0 = time.time()
+    refs = reference_library()
+    rows = {}
+    for r in refs:
+        base = r.scaling[max(r.scaling)].exec_time
+        rows[r.name] = {
+            str(f): round(r.scaling[f].exec_time / base - 1.0, 4)
+            for f in sorted(r.scaling)
+        }
+    with open(os.path.join(RESULTS, "freq_scaling.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    # summarize: worst-cap degradation for a compute vs memory workload
+    comp = rows["sgemm-25k"][str(min(FREQ_SWEEP))]
+    mem = rows["pagerank-pannotia"][str(min(FREQ_SWEEP))]
+    emit("perf_scaling_fig7", (time.time() - t0) * 1e6,
+         f"degr@0.6[sgemm]={comp:.2f};degr@0.6[pagerank-mem]={mem:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    o = run()
+    for name in ("sgemm-25k", "pagerank-pannotia", "command-r-35b:train_4k",
+                 "command-r-35b:decode_32k", "jamba-1.5-large-398b:train_4k"):
+        print(f"{name:34s}", {k: f"{v:+.2f}" for k, v in o[name].items()})

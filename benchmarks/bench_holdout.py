@@ -1,0 +1,77 @@
+"""Paper §7.2 / Figs. 9-11: hold-one-out generalization across unique
+workloads — p90/p95/p99 power and performance prediction errors, plus the
+error-vs-neighbor-distance histograms."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import (RESULTS, emit, holdout_perf_error,
+                               holdout_power_error, reference_library,
+                               unique_workloads)
+from repro.core import MinosClassifier
+
+
+def run() -> dict:
+    t0 = time.time()
+    refs = reference_library()
+    uniq = unique_workloads(refs)
+    clf = MinosClassifier(uniq)
+    rows = []
+    for target in uniq:
+        nn_pwr, d_pwr = clf.power_neighbor(target)
+        nn_perf, d_perf = clf.util_neighbor(target)
+        rec = {"target": target.name, "power_neighbor": nn_pwr.name,
+               "cos_distance": round(d_pwr, 4),
+               "perf_neighbor": nn_perf.name,
+               "eucl_distance": round(d_perf, 4)}
+        for q in ("p90", "p95", "p99"):
+            err, f, obs = holdout_power_error(target, nn_pwr, q)
+            rec[f"{q}_err"] = round(err, 4)
+            rec[f"{q}_cap"] = f
+        perr, pf, pobs = holdout_perf_error(target, nn_perf)
+        rec["perf_err"] = round(perr, 4)
+        rec["perf_cap"] = pf
+        rows.append(rec)
+
+    mean = {q: float(np.mean([r[f"{q}_err"] for r in rows]))
+            for q in ("p90", "p95", "p99")}
+    mean["perf"] = float(np.mean([r["perf_err"] for r in rows]))
+    perfect = sum(1 for r in rows if r["perf_err"] < 0.005)
+
+    # Fig 9c / 11c: error binned by distance
+    def binify(rows, dist_key, err_key, edges):
+        out = []
+        for lo, hi in zip(edges[:-1], edges[1:]):
+            sel = [r[err_key] for r in rows if lo <= r[dist_key] < hi]
+            out.append({"bin": f"[{lo},{hi})", "n": len(sel),
+                        "mean_err": round(float(np.mean(sel)), 4) if sel else None})
+        return out
+
+    result = {
+        "rows": rows,
+        "mean_errors": {k: round(v, 4) for k, v in mean.items()},
+        "perfect_perf_predictions": f"{perfect}/{len(rows)}",
+        "err_by_cos_distance": binify(rows, "cos_distance", "p90_err",
+                                      [0, 0.02, 0.05, 0.1, 0.25, 1.01]),
+        "err_by_eucl_distance": binify(rows, "eucl_distance", "perf_err",
+                                       [0, 0.05, 0.1, 0.2, 0.5, 10.0]),
+    }
+    with open(os.path.join(RESULTS, "holdout.json"), "w") as f:
+        json.dump(result, f, indent=1)
+    emit("holdout_fig9_10_11", (time.time() - t0) * 1e6,
+         f"p90={mean['p90']:.3f};p95={mean['p95']:.3f};p99={mean['p99']:.3f};"
+         f"perf={mean['perf']:.3f};perfect={perfect}/{len(rows)}")
+    return result
+
+
+if __name__ == "__main__":
+    o = run()
+    print("mean errors:", o["mean_errors"], o["perfect_perf_predictions"])
+    for r in o["rows"]:
+        print(f"  {r['target']:36s} pwrNN={r['power_neighbor']:28s} "
+              f"d={r['cos_distance']:.3f} p90err={r['p90_err']:.3f} "
+              f"perfNN={r['perf_neighbor']:28s} perferr={r['perf_err']:.3f}")

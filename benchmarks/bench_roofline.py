@@ -1,0 +1,90 @@
+"""Assignment §Roofline: aggregate the dry-run JSONs into the per-cell
+three-term roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS, emit
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "dryrun", mesh, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _rebuild(c: dict) -> "object":
+    """Recompute the roofline report from the stored raw per-device costs
+    (keeps the table in sync with analysis/roofline.py without recompiling)."""
+    from repro.analysis.hlo import Cost
+    from repro.analysis.roofline import build_report
+    from repro.configs import ARCHS, SHAPES
+    r = c["roofline"]
+    cost = Cost(flops=r["flops"], hbm_bytes=r["hbm_bytes"],
+                hbm_bytes_min=r.get("hbm_bytes_min", r["hbm_bytes"]),
+                coll_bytes=dict(r["coll_bytes"]),
+                unresolved_loops=r.get("unresolved_loops", 0))
+    return build_report(cost, ARCHS[c["arch"]], SHAPES[c["shape"]],
+                        c["mesh"], c["n_chips"])
+
+
+def table(mesh: str = "single") -> list[dict]:
+    rows = []
+    for c in load_cells(mesh):
+        if c["status"] != "OK":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "status": c["status"],
+                         "reason": c.get("reason", "")[:60]})
+            continue
+        rep = _rebuild(c)
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "status": "OK",
+            "t_compute_ms": round(rep.t_compute * 1e3, 2),
+            "t_memory_ms": round(rep.t_memory * 1e3, 2),
+            "t_collective_ms": round(rep.t_collective * 1e3, 2),
+            "dominant": rep.dominant,
+            "useful_ratio": round(rep.useful_ratio, 3),
+            "roofline_frac": round(rep.roofline_fraction, 4),
+            "temp_gib": round(c["memory"]["temp_bytes"] / 2**30, 2),
+            "args_gib": round(c["memory"]["args_bytes"] / 2**30, 2),
+        })
+    return rows
+
+
+def run() -> dict:
+    t0 = time.time()
+    out = {}
+    for mesh in ("single", "multi"):
+        out[mesh] = table(mesh)
+    with open(os.path.join(RESULTS, "roofline_table.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    ok = [r for r in out["single"] if r.get("status") == "OK"]
+    skip = [r for r in out["single"] if r.get("status") == "SKIP"]
+    fail = [r for r in out["single"] if r.get("status") == "FAIL"]
+    worst = min(ok, key=lambda r: r["roofline_frac"]) if ok else {}
+    best = max(ok, key=lambda r: r["roofline_frac"]) if ok else {}
+    emit("roofline_table", (time.time() - t0) * 1e6,
+         f"ok={len(ok)};skip={len(skip)};fail={len(fail)};"
+         f"worst={worst.get('arch','')}:{worst.get('shape','')}="
+         f"{worst.get('roofline_frac', 0)};"
+         f"best={best.get('arch','')}:{best.get('shape','')}="
+         f"{best.get('roofline_frac', 0)}")
+    return out
+
+
+if __name__ == "__main__":
+    o = run()
+    hdr = f"{'arch':24s}{'shape':13s}{'t_comp':>9s}{'t_mem':>9s}{'t_coll':>9s}  {'dom':10s}{'useful':>7s}{'frac':>7s}"
+    print(hdr)
+    for r in o["single"]:
+        if r.get("status") != "OK":
+            print(f"{r['arch']:24s}{r['shape']:13s}  {r['status']}: {r.get('reason','')}")
+            continue
+        print(f"{r['arch']:24s}{r['shape']:13s}{r['t_compute_ms']:9.1f}"
+              f"{r['t_memory_ms']:9.1f}{r['t_collective_ms']:9.1f}  "
+              f"{r['dominant']:10s}{r['useful_ratio']:7.2f}{r['roofline_frac']:7.3f}")

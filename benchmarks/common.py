@@ -1,0 +1,77 @@
+"""Shared benchmark infrastructure: the cached reference library and the
+hold-one-out protocol helpers (paper §7.2)."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.analysis.hardware import FREQ_SWEEP
+from repro.core import MinosClassifier, WorkloadProfile
+from repro.core.algorithm1 import (cap_perf_centric, cap_power_centric,
+                                   POWER_BOUND)
+from repro.core.reference_store import load_profiles, save_profiles
+from repro.telemetry import TPUPowerModel, build_reference_set
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "results")
+STORE = os.path.join(RESULTS, "reference_store")
+
+
+def reference_library(rebuild: bool = False) -> list[WorkloadProfile]:
+    os.makedirs(RESULTS, exist_ok=True)
+    if not rebuild and os.path.exists(os.path.join(STORE, "profiles.json")):
+        return load_profiles(STORE)
+    t0 = time.time()
+    refs = build_reference_set(TPUPowerModel(), target_duration=3.0)
+    save_profiles(refs, STORE)
+    print(f"# built reference library: {len(refs)} profiles "
+          f"in {time.time() - t0:.1f}s")
+    return refs
+
+
+def unique_workloads(refs: list[WorkloadProfile]) -> list[WorkloadProfile]:
+    """One profile per workload for hold-one-out (paper: the largest input;
+    here: the train cell for each arch, plus every microbenchmark)."""
+    out = []
+    seen = set()
+    for r in refs:
+        if ":" in r.name:
+            arch, shape = r.name.split(":")
+            if shape != "train_4k" or arch in seen:
+                continue
+            seen.add(arch)
+        out.append(r)
+    return out
+
+
+def nearest_freq(profile: WorkloadProfile, f: float) -> float:
+    return min(profile.scaling, key=lambda x: abs(x - f))
+
+
+def degradation(profile: WorkloadProfile, f: float) -> float:
+    base = profile.scaling[max(profile.scaling)].exec_time
+    return profile.scaling[nearest_freq(profile, f)].exec_time / base - 1.0
+
+
+def holdout_power_error(target: WorkloadProfile, neighbor: WorkloadProfile,
+                        quantile: str = "p90") -> tuple[float, float, float]:
+    """(abs prediction error, selected cap, observed value) for PowerCentric."""
+    f = cap_power_centric(neighbor, POWER_BOUND, quantile)
+    pred = getattr(neighbor.scaling[nearest_freq(neighbor, f)], quantile)
+    obs = getattr(target.scaling[nearest_freq(target, f)], quantile)
+    return abs(obs - pred), f, obs
+
+
+def holdout_perf_error(target: WorkloadProfile, neighbor: WorkloadProfile
+                       ) -> tuple[float, float, float]:
+    f = cap_perf_centric(neighbor)
+    pred = degradation(neighbor, f)
+    obs = degradation(target, f)
+    return abs(obs - pred), f, obs
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The run.py output contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,34 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV lines (see each bench module for the
+JSON artifacts written under results/).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_baseline_cmp, bench_binsize, bench_case_study,
+                            bench_cdf, bench_classification, bench_freq_scaling,
+                            bench_holdout, bench_kernels, bench_roofline,
+                            bench_savings)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (bench_classification, bench_cdf, bench_freq_scaling,
+                bench_case_study, bench_holdout, bench_baseline_cmp,
+                bench_binsize, bench_savings, bench_kernels, bench_roofline):
+        try:
+            mod.run()
+        except Exception:
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

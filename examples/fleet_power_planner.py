@@ -1,0 +1,55 @@
+"""Fleet what-if: pack a job mix into a pod power budget using Minos
+predictions (the paper's POLCA-style oversubscription use case, §4.3).
+
+    PYTHONPATH=src python examples/fleet_power_planner.py
+"""
+import numpy as np
+
+from benchmarks.common import reference_library
+from repro.analysis.hardware import V5E
+from repro.core import MinosClassifier
+from repro.sched import PowerAwareScheduler
+from repro.telemetry import TPUPowerModel, profile_once
+from repro.telemetry.workloads import holdout_streams, reference_streams
+
+
+def main() -> None:
+    refs = reference_library()
+    clf = MinosClassifier(refs)
+    sched = PowerAwareScheduler(clf, tdp_w=V5E.tdp_w, objective="powercentric")
+
+    # a queue of jobs: profiles from one uncapped run each
+    model = TPUPowerModel()
+    streams = {s.name: s for s in reference_streams() + holdout_streams()}
+    queue = [
+        ("command-r-35b:train_4k", 256),
+        ("deepseek-v2-236b:decode_32k", 256),
+        ("vector-search", 64),
+        ("granite-moe-3b-a800m:decode_32k", 64),
+        ("lsms-like", 32),
+    ]
+    jobs = [(profile_once(streams[name], model, V5E.tdp_w, seed=i), chips)
+            for i, (name, chips) in enumerate(queue)]
+    jobs = [(p, c) for (p, c) in jobs]
+
+    total_chips = sum(c for _, c in queue)
+    nameplate = total_chips * V5E.tdp_w
+    budget = 0.75 * nameplate   # an oversubscribed pod
+    print(f"pod: {total_chips} chips, nameplate {nameplate/1e3:.0f} kW, "
+          f"budget {budget/1e3:.0f} kW (75% oversubscription)")
+
+    res = sched.schedule(jobs, budget_w=budget)
+    print(f"\nplaced {len(res.placed)} jobs, deferred {len(res.deferred)}:")
+    for j in res.placed:
+        print(f"  {j.name:36s} chips={j.chips:4d} cap=f{j.cap:.2f} "
+              f"p90={j.predicted_p90_w:5.0f} W/chip "
+              f"(neighbor: {j.selection.power_neighbor})")
+    for name in res.deferred:
+        print(f"  deferred: {name}")
+    print(f"\nplanned p90 power: {res.planned_power_w/1e3:.0f} kW "
+          f"({res.planned_power_w/budget:.0%} of budget; a TDP-provisioned "
+          f"scheduler would reserve {nameplate/1e3:.0f} kW)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: classify a never-before-seen workload and pick its frequency
+cap with Minos — end to end in under a minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.analysis.hardware import FREQ_SWEEP
+from repro.core import MinosClassifier, select_optimal_freq
+from repro.core.algorithm1 import profiling_savings
+from repro.telemetry import TPUPowerModel, profile_once, profile_workload
+from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
+                                           micro_spmv_compute,
+                                           micro_spmv_memory, micro_stencil,
+                                           micro_vector_search)
+
+
+def main() -> None:
+    model = TPUPowerModel()
+    tdp = model.spec.tdp_w
+    freqs = (0.6, 0.7, 0.8, 0.9, 1.0)
+
+    # 1. reference library: a few profiled-once-per-frequency workloads
+    print("building a small reference library (5 workloads x 5 freqs)...")
+    refs = [profile_workload(s, model, freqs, tdp, seed=i, target_duration=1.0)
+            for i, s in enumerate([micro_gemm(), micro_spmv_memory(),
+                                   micro_spmv_compute(), micro_idle_burst(),
+                                   micro_stencil()])]
+    clf = MinosClassifier(refs)
+
+    # 2. a NEW workload arrives: profile it ONCE, at the default clock
+    target = profile_once(micro_vector_search(), model, tdp, seed=99)
+    print(f"\nnew workload: {target.name}")
+    print(f"  p90 power     : {target.p_quantile(90):.2f} x TDP")
+    print(f"  mxu/hbm util  : {target.sm_util:.2f} / {target.dram_util:.2f}")
+
+    # 3. Algorithm 1: pick the frequency cap from the nearest neighbors
+    sel = select_optimal_freq(target, clf)
+    print(f"\nAlgorithm 1 selection:")
+    print(f"  bin size        : {sel.bin_size}")
+    print(f"  power neighbor  : {sel.power_neighbor} (cosine d={sel.power_distance:.3f})")
+    print(f"  perf neighbor   : {sel.util_neighbor} (euclid d={sel.util_distance:.3f})")
+    print(f"  PowerCentric cap: f={sel.f_pwr:.2f}  (p90 spikes < 1.3 x TDP)")
+    print(f"  PerfCentric cap : f={sel.f_perf:.2f} (perf loss < 5%)")
+
+    # 4. validate against ground truth the classifier never saw
+    truth = profile_workload(micro_vector_search(), model, freqs, tdp, seed=99)
+    obs = truth.scaling[sel.f_pwr].p90
+    print(f"\nvalidation (simulator ground truth):")
+    print(f"  observed p90 at cap {sel.f_pwr:.2f}: {obs:.2f} x TDP "
+          f"({'within' if obs <= 1.3 else 'EXCEEDS'} the 1.3 bound)")
+    print(f"  profiling time saved vs full sweep: "
+          f"{profiling_savings(truth, list(freqs)):.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serve a small model with batched requests: prefill once, decode with a
+sequence-sharded KV cache (the decode_32k code path, scaled down to CPU).
+
+    PYTHONPATH=src python examples/serve_lm.py --tokens 24
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models.common import SMOKE_TOPO
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()
+    engine = ServeEngine(cfg, SMOKE_TOPO,
+                         max_len=args.prompt_len + args.tokens + 4)
+    params = engine.init_params(jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size,
+                                    (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = rng.standard_normal(
+            (args.batch, cfg.num_image_tokens, cfg.d_model)).astype(np.float32) * 0.02
+    if cfg.family == "audio":
+        batch["frames"] = rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32) * 0.02
+
+    t0 = time.perf_counter()
+    out = engine.generate(params, batch, args.tokens, greedy=False,
+                          key=jax.random.key(1))
+    dt = time.perf_counter() - t0
+    print(f"arch={args.arch} (reduced) batch={args.batch} "
+          f"prompt={args.prompt_len} generated={args.tokens}")
+    print("sampled ids (first request):", out[0].tolist())
+    print(f"prefill tokens: {engine.stats.prefill_tokens}  "
+          f"decode steps: {engine.stats.decode_steps}  "
+          f"wall: {dt:.2f}s ({args.batch*args.tokens/dt:.1f} tok/s incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

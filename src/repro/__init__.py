@@ -1,0 +1,3 @@
+"""repro: Minos (power/performance workload classification) on a multi-pod
+JAX training/serving framework. See DESIGN.md."""
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from repro.analysis.hardware import FREQ_SWEEP, V5E, ChipSpec
+from repro.analysis.hlo import Cost, HloCostAnalyzer, analyze_hlo_text
+from repro.analysis.roofline import RooflineReport, build_report, model_flops

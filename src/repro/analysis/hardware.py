@@ -1,0 +1,43 @@
+"""Target hardware constants (TPU v5e) used by the roofline analysis and the
+power/performance simulator.  The container is CPU-only; these describe the
+TARGET, per the assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12          # per chip
+    hbm_bw: float = 819e9                    # bytes/s
+    hbm_bytes: float = 16 * 2**30
+    ici_link_bw: float = 50e9                # bytes/s per link (one direction)
+    ici_links: int = 4                       # 2D torus: 4 links per chip
+    # power model (OCP OAI-style sustained/excursion structure, DESIGN.md §2)
+    tdp_w: float = 200.0
+    idle_w: float = 60.0
+    max_excursion: float = 2.0               # x TDP, OCP spec ceiling
+    # normalized DVFS range (maps the paper's 1300..2100 MHz sweep)
+    f_min: float = 0.6
+    f_max: float = 1.0
+    v_min: float = 0.72                      # V(f_min)/V(f_max)
+
+    @property
+    def machine_balance(self) -> float:
+        """FLOP per HBM byte at the ridge point."""
+        return self.peak_flops_bf16 / self.hbm_bw
+
+    def voltage(self, f: float) -> float:
+        """Normalized V(f), linear between (f_min, v_min) and (f_max, 1)."""
+        f = min(max(f, self.f_min), self.f_max)
+        t = (f - self.f_min) / (self.f_max - self.f_min)
+        return self.v_min + (1.0 - self.v_min) * t
+
+
+V5E = ChipSpec()
+
+# the frequency sweep used for reference profiling (9 points, like the
+# paper's 1300->2100 MHz in 100 MHz steps)
+FREQ_SWEEP = tuple(round(0.6 + 0.05 * i, 2) for i in range(9))

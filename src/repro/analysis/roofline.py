@@ -1,0 +1,157 @@
+"""Three-term roofline from the parsed dry-run artifact (assignment §Roofline).
+
+    T_compute    = FLOPs / (chips x peak)       [parsed HLO is per-device, so
+    T_memory     = bytes / (chips x HBM bw)      chips divide out: terms are
+    T_collective = coll_bytes / (links x bw)     computed per device directly]
+
+MODEL_FLOPS = 6*N*D (train, active params) / 2*N*D (prefill) / decode:
+2*N_active*batch + cache reads — the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat & redundancy waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.analysis.hardware import ChipSpec, V5E
+from repro.analysis.hlo import Cost
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops: float                 # per device
+    hbm_bytes: float             # upper (CPU-fusion) estimate
+    hbm_bytes_min: float         # lower (TPU-fusion) estimate — used for terms
+    coll_bytes: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float           # global useful flops
+    useful_ratio: float          # model_flops / (flops * chips)
+    unresolved_loops: int = 0
+    note: str = ""
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound on step time."""
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def bound_time(self) -> float:
+        """Perfect-overlap lower bound (max of terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    model_bytes: float = 0.0     # minimal useful HBM traffic per device
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant roofline achieved: the time an ideal
+        machine needs for the *useful* work (max of useful-compute and
+        useful-memory time) over the no-overlap step time of the compiled
+        program. 1.0 = every byte/flop moved was necessary and at peak."""
+        if self.step_time <= 0:
+            return 0.0
+        t_useful = max(self.model_flops / self.n_chips / V5E.peak_flops_bf16,
+                       self.model_bytes / V5E.hbm_bw)
+        return min(t_useful / self.step_time, 1.0)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_chips": self.n_chips, "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_min": self.hbm_bytes_min,
+            "coll_bytes": self.coll_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops, "useful_ratio": self.useful_ratio,
+            "model_bytes": self.model_bytes,
+            "roofline_fraction": self.roofline_fraction,
+            "step_time_noverlap": self.step_time,
+            "bound_time": self.bound_time,
+            "unresolved_loops": self.unresolved_loops,
+            "note": self.note,
+        }
+
+
+def model_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                           n_chips: int, tp: int = 16) -> float:
+    """Minimal useful HBM traffic per device per step (2-byte weights).
+
+    train:   3 weight passes (fwd, bwd, update) + optimizer moments r/w +
+             ~12 bytes/token/layer/d of activation traffic
+    prefill: 1 weight pass + kv-cache write + ~6 B/tok/layer/d activations
+    decode:  weights resident/TP read once + cache read + one slot written
+    """
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    d, L = cfg.d_model, cfg.num_layers
+    if shape.kind == "train":
+        w = n_total / n_chips * (3 * 2 + 2 * 8)       # bf16 x3 + m,v fp32 r/w
+        act = shape.tokens / n_chips * d * L * 12
+        return w + act
+    if shape.kind == "prefill":
+        w = n_total / n_chips * 2
+        act = shape.tokens / n_chips * d * L * 6
+        kv = shape.tokens / n_chips * 2 * max(cfg.num_kv_heads, 1) * \
+            max(cfg.head_dim, 1) * 2
+        return w + act + kv
+    # decode
+    w = n_active * 2 / tp
+    s = shape.seq_len
+    if cfg.family == "ssm":
+        cache = L * cfg.d_inner * cfg.ssm_state * 4 * shape.global_batch
+    elif cfg.use_mla:
+        cache = L * s * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2 * shape.global_batch
+    else:
+        n_attn = L // cfg.attn_period if (cfg.family == "hybrid" and cfg.attn_period) else L
+        cache = n_attn * s * 2 * cfg.num_kv_heads * cfg.head_dim * 2 * shape.global_batch
+    return w + cache / n_chips  # cache sharded over all chips (batch x seq)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence + attention over the cache
+    base = 2.0 * n_active * shape.global_batch
+    s = shape.seq_len
+    attn = 0.0
+    if cfg.num_heads:
+        n_attn = cfg.num_layers
+        if cfg.family == "hybrid" and cfg.attn_period:
+            n_attn = cfg.num_layers // cfg.attn_period
+        attn = 4.0 * shape.global_batch * s * cfg.num_heads * \
+            max(cfg.head_dim, 1) * n_attn
+    return base + attn
+
+
+def build_report(cost: Cost, cfg: ModelConfig, shape: ShapeConfig,
+                 mesh_name: str, n_chips: int,
+                 spec: ChipSpec = V5E, note: str = "") -> RooflineReport:
+    t_c = cost.flops / spec.peak_flops_bf16
+    # memory term from the TPU-fusion-aware lower estimate (the raw CPU-HLO
+    # byte count inflates elementwise traffic TPU fusion would eliminate)
+    t_m = (cost.hbm_bytes_min or cost.hbm_bytes) / spec.hbm_bw
+    t_x = cost.collective_total / (spec.ici_links * spec.ici_link_bw)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mb = model_bytes_per_device(cfg, shape, n_chips)
+    useful = mf / max(cost.flops * n_chips, 1e-9)
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+        hbm_bytes_min=cost.hbm_bytes_min or cost.hbm_bytes,
+        coll_bytes=dict(cost.coll_bytes),
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dominant,
+        model_flops=mf, useful_ratio=useful, model_bytes=mb,
+        unresolved_loops=cost.unresolved_loops, note=note,
+    )

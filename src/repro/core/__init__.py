@@ -1,0 +1,14 @@
+"""Minos core: the paper's contribution (spike vectors, dual classification,
+Algorithm 1 frequency selection, baselines)."""
+from repro.core import spikes
+from repro.core.algorithm1 import (FreqSelection, cap_perf_centric,
+                                   cap_power_centric, choose_bin_size,
+                                   profiling_savings, select_optimal_freq)
+from repro.core.baselines import mean_power_neighbor, util_only_neighbor
+from repro.core.classify import (FreqPoint, MinosClassifier, WorkloadProfile,
+                                 app_utilization)
+from repro.core.clustering import (best_k_by_silhouette, cosine_distance_matrix,
+                                   cut, cut_k, dendrogram_order,
+                                   euclidean_distance_matrix, kmeans, linkage,
+                                   silhouette_score)
+from repro.core.reference_store import load_profiles, save_profiles

@@ -1,0 +1,103 @@
+"""Algorithm 1 — SELECT_OPTIMAL_FREQ (paper §4.3).
+
+Faithful implementation:
+  ChooseBinSize     - offline argmin of p90 prediction error over candidates
+  GetPwrNeighbor    - nearest reference by cosine distance on spike vectors
+  GetUtilNeighbor   - nearest reference by Euclidean distance in util space
+  CapPowerCentric   - highest frequency whose *neighbor* p90 spikes < 1.3*TDP
+  CapPerfCentric    - lowest frequency whose *neighbor* perf loss <= 5%
+
+The target workload contributes exactly ONE profile (at the uncapped clock);
+all frequency-scaling information comes from the neighbor — that is the
+paper's 89-90% profiling-time saving.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.classify import MinosClassifier, WorkloadProfile
+
+DEFAULT_BIN_CANDIDATES = (0.05, 0.1, 0.15, 0.2, 0.25, 0.5)
+POWER_BOUND = 1.3       # x TDP on p90 spikes (paper)
+PERF_BOUND = 0.05       # 5% max degradation (paper, same as POLCA)
+
+
+@dataclass
+class FreqSelection:
+    target: str
+    bin_size: float
+    power_neighbor: str
+    power_distance: float
+    util_neighbor: str
+    util_distance: float
+    f_pwr: float
+    f_perf: float
+
+    def cap(self, objective: str) -> float:
+        return self.f_pwr if objective == "powercentric" else self.f_perf
+
+
+def choose_bin_size(target: WorkloadProfile, clf: MinosClassifier,
+                    candidates=DEFAULT_BIN_CANDIDATES,
+                    quantile: float = 90.0) -> float:
+    """Err_c(T) = |p90(T) - p90(NN_c(T))| at the profiled frequency (§7.4)."""
+    best_c, best_err = candidates[0], np.inf
+    p_t = target.p_quantile(quantile)
+    for c in candidates:
+        nn, _ = clf.power_neighbor(target, bin_size=c)
+        err = abs(p_t - nn.p_quantile(quantile))
+        if err < best_err:
+            best_c, best_err = c, err
+    return best_c
+
+
+def cap_power_centric(neighbor: WorkloadProfile, bound: float = POWER_BOUND,
+                      quantile: str = "p90") -> float:
+    """Highest frequency cap keeping the neighbor's p90 spikes under bound."""
+    freqs = sorted(neighbor.scaling, reverse=True)
+    for f in freqs:
+        if getattr(neighbor.scaling[f], quantile) < bound:
+            return f
+    return freqs[-1] if freqs else 1.0
+
+
+def cap_perf_centric(neighbor: WorkloadProfile, bound: float = PERF_BOUND) -> float:
+    """Lowest frequency cap keeping the neighbor's degradation within bound."""
+    freqs = sorted(neighbor.scaling)
+    if not freqs:
+        return 1.0
+    base = neighbor.scaling[max(freqs)].exec_time
+    for f in freqs:
+        degr = neighbor.scaling[f].exec_time / base - 1.0
+        if degr <= bound:
+            return f
+    return max(freqs)
+
+
+def select_optimal_freq(target: WorkloadProfile, clf: MinosClassifier,
+                        bin_candidates=DEFAULT_BIN_CANDIDATES) -> FreqSelection:
+    c_star = choose_bin_size(target, clf, bin_candidates)
+    r_pwr, d_pwr = clf.power_neighbor(target, bin_size=c_star)
+    r_util, d_util = clf.util_neighbor(target)
+    return FreqSelection(
+        target=target.name,
+        bin_size=c_star,
+        power_neighbor=r_pwr.name,
+        power_distance=d_pwr,
+        util_neighbor=r_util.name,
+        util_distance=d_util,
+        f_pwr=cap_power_centric(r_pwr),
+        f_perf=cap_perf_centric(r_util),
+    )
+
+
+def profiling_savings(target: WorkloadProfile, freqs: list[float]) -> float:
+    """1 - T_f0 / sum_f T_f  (paper §7.1.3): one profiled frequency vs a
+    sweep; exec times taken from the target's true scaling data."""
+    if not target.scaling:
+        return 1.0 - 1.0 / max(len(freqs), 1)
+    total = sum(target.scaling[f].exec_time for f in freqs if f in target.scaling)
+    f0 = max(target.scaling)
+    return 1.0 - target.scaling[f0].exec_time / total

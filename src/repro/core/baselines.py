@@ -1,0 +1,43 @@
+"""Baselines Minos is compared against (paper §7.3).
+
+Guerreiro et al. [29] — the state of the art the paper beats — classifies
+workloads by *mean power*; we implement its nearest-neighbor analogue
+(closest mean relative power) with the same prediction protocol as Minos so
+the comparison isolates the feature (mean power vs spike distribution).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.classify import WorkloadProfile
+
+
+def mean_power_neighbor(target: WorkloadProfile,
+                        references: list[WorkloadProfile],
+                        exclude: str | None = None
+                        ) -> tuple[WorkloadProfile, float]:
+    mt = target.mean_power
+    best, best_d = None, np.inf
+    for r in references:
+        if r.name == target.name or r.name == exclude:
+            continue
+        d = abs(mt - r.mean_power)
+        if d < best_d:
+            best, best_d = r, d
+    return best, float(best_d)
+
+
+def util_only_neighbor(target: WorkloadProfile,
+                       references: list[WorkloadProfile],
+                       exclude: str | None = None
+                       ) -> tuple[WorkloadProfile, float]:
+    """Performance-counter-only classification (no power signal)."""
+    v = target.util_point
+    best, best_d = None, np.inf
+    for r in references:
+        if r.name == target.name or r.name == exclude:
+            continue
+        d = float(np.linalg.norm(v - r.util_point))
+        if d < best_d:
+            best, best_d = r, d
+    return best, best_d

@@ -1,0 +1,142 @@
+"""Workload profiles + the Minos dual classifier (paper §4).
+
+A ``WorkloadProfile`` is what one low-cost profiling run produces:
+  * the filtered power trace at the profiled frequency (uncapped by default)
+  * per-kernel (duration, sm_util, dram_util) -> duration-weighted app point
+  * optionally, per-frequency scaling data {freq: FreqPoint} — available only
+    for *reference* workloads (that is exactly the paper's premise: new
+    workloads are profiled once, at the default clock).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import spikes
+from repro.core.clustering import (
+    best_k_by_silhouette,
+    cosine_distance_matrix,
+    cut_k,
+    kmeans,
+    linkage,
+)
+
+
+@dataclass
+class FreqPoint:
+    freq: float                  # normalized cap (f / f_max)
+    p90: float                   # 90th pct of power, relative to TDP
+    p95: float
+    p99: float
+    mean_power: float            # relative to TDP
+    exec_time: float             # seconds per iteration
+    spike_vec: np.ndarray | None = None
+
+
+@dataclass
+class WorkloadProfile:
+    name: str
+    tdp: float
+    power_trace: np.ndarray              # filtered, trimmed, at profile freq
+    sm_util: float                       # duration-weighted app SM/MXU util
+    dram_util: float                     # duration-weighted app HBM util
+    exec_time: float                     # at profile freq
+    scaling: dict[float, FreqPoint] = field(default_factory=dict)
+    domain: str = ""
+
+    def spike_vec(self, bin_size: float) -> np.ndarray:
+        return spikes.spike_vector(self.power_trace, self.tdp, bin_size)
+
+    def p_quantile(self, q: float) -> float:
+        return spikes.p_quantile(self.power_trace, self.tdp, q)
+
+    @property
+    def mean_power(self) -> float:
+        return spikes.mean_power_rel(self.power_trace, self.tdp)
+
+    @property
+    def util_point(self) -> np.ndarray:
+        return np.array([self.dram_util, self.sm_util], np.float64)
+
+
+def app_utilization(kernels: list[tuple[float, float, float]]) -> tuple[float, float]:
+    """Duration-weighted (sm, dram) utilization from per-kernel rows
+    (duration, sm_util, dram_util) — paper Eq. (1)/(2)."""
+    t = np.array([k[0] for k in kernels], np.float64)
+    sm = np.array([k[1] for k in kernels], np.float64)
+    dr = np.array([k[2] for k in kernels], np.float64)
+    tot = t.sum()
+    if tot <= 0:
+        return 0.0, 0.0
+    return float((t * sm).sum() / tot), float((t * dr).sum() / tot)
+
+
+class MinosClassifier:
+    """Power-spike (hierarchical/cosine) + utilization (K-Means) classifier."""
+
+    def __init__(self, references: list[WorkloadProfile], bin_size: float = 0.1):
+        if not references:
+            raise ValueError("empty reference set")
+        self.references = list(references)
+        self.bin_size = bin_size
+
+    # -- power side -----------------------------------------------------
+    def spike_matrix(self, bin_size: float | None = None) -> np.ndarray:
+        c = bin_size or self.bin_size
+        return np.stack([r.spike_vec(c) for r in self.references])
+
+    def power_linkage(self, bin_size: float | None = None) -> np.ndarray:
+        D = cosine_distance_matrix(self.spike_matrix(bin_size))
+        return linkage(D, method="ward")
+
+    def power_classes(self, k: int = 3, bin_size: float | None = None) -> np.ndarray:
+        """Dendrogram slice for interpretation only (predictions use NN)."""
+        return cut_k(self.power_linkage(bin_size), k)
+
+    def power_neighbor(self, target: WorkloadProfile,
+                       bin_size: float | None = None,
+                       exclude: str | None = None) -> tuple[WorkloadProfile, float]:
+        c = bin_size or self.bin_size
+        v = target.spike_vec(c)
+        best, best_d = None, np.inf
+        for r in self.references:
+            if r.name == target.name or r.name == exclude:
+                continue
+            d = _cosine_distance(v, r.spike_vec(c))
+            if d < best_d:
+                best, best_d = r, d
+        return best, float(best_d)
+
+    # -- utilization side -------------------------------------------------
+    def util_matrix(self) -> np.ndarray:
+        return np.stack([r.util_point for r in self.references])
+
+    def util_classes(self, k: int | None = None, seed: int = 0):
+        X = self.util_matrix()
+        if k is None:
+            k, scores = best_k_by_silhouette(X, seed=seed)
+        else:
+            scores = None
+        centers, labels, _ = kmeans(X, k, seed=seed)
+        return labels, centers, k, scores
+
+    def util_neighbor(self, target: WorkloadProfile,
+                      exclude: str | None = None) -> tuple[WorkloadProfile, float]:
+        v = target.util_point
+        best, best_d = None, np.inf
+        for r in self.references:
+            if r.name == target.name or r.name == exclude:
+                continue
+            d = float(np.linalg.norm(v - r.util_point))
+            if d < best_d:
+                best, best_d = r, d
+        return best, best_d
+
+
+def _cosine_distance(a: np.ndarray, b: np.ndarray) -> float:
+    na, nb = np.linalg.norm(a), np.linalg.norm(b)
+    if na == 0 or nb == 0:
+        return 1.0
+    return float(1.0 - np.clip(np.dot(a, b) / (na * nb), -1.0, 1.0))

@@ -1,0 +1,250 @@
+"""Clustering primitives implemented from scratch (no scipy/sklearn in the
+container): agglomerative hierarchical clustering (Lance-Williams updates,
+ward/average/complete linkage) over cosine distances, a jit'd K-Means, and
+silhouette scores.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# distances
+# ---------------------------------------------------------------------------
+def cosine_distance_matrix(V: np.ndarray) -> np.ndarray:
+    """Pairwise cosine distances between row vectors (zero rows -> dist 1)."""
+    V = np.asarray(V, np.float64)
+    norms = np.linalg.norm(V, axis=1)
+    safe = np.where(norms > 0, norms, 1.0)
+    U = V / safe[:, None]
+    sim = U @ U.T
+    sim = np.clip(sim, -1.0, 1.0)
+    d = 1.0 - sim
+    zero = norms == 0
+    d[zero, :] = 1.0
+    d[:, zero] = 1.0
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def euclidean_distance_matrix(X: np.ndarray) -> np.ndarray:
+    X = np.asarray(X, np.float64)
+    sq = np.sum(X * X, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2 * X @ X.T
+    return np.sqrt(np.maximum(d2, 0.0))
+
+
+def mahalanobis_distance_matrix(X: np.ndarray, reg: float = 1e-6) -> np.ndarray:
+    """Mahalanobis pairwise distances (paper §4.1.2 names this as an
+    alternative metric that accounts for feature correlations)."""
+    X = np.asarray(X, np.float64)
+    cov = np.cov(X, rowvar=False) + reg * np.eye(X.shape[1])
+    prec = np.linalg.inv(cov)
+    diff = X[:, None, :] - X[None, :, :]
+    d2 = np.einsum("ijk,kl,ijl->ij", diff, prec, diff)
+    return np.sqrt(np.maximum(d2, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# agglomerative hierarchical clustering (Lance-Williams)
+# ---------------------------------------------------------------------------
+_LW = {
+    # (ai_fn, aj_fn, b_fn, g) over cluster sizes (ni, nj, nk)
+    "average": lambda ni, nj, nk: (ni / (ni + nj), nj / (ni + nj), 0.0, 0.0),
+    "complete": lambda ni, nj, nk: (0.5, 0.5, 0.0, 0.5),
+    "single": lambda ni, nj, nk: (0.5, 0.5, 0.0, -0.5),
+}
+
+
+def linkage(dist: np.ndarray, method: str = "ward") -> np.ndarray:
+    """scipy-compatible linkage matrix Z (n-1, 4): [i, j, dist, size].
+
+    ward uses the Lance-Williams recurrence on squared distances; other
+    methods operate on raw distances.
+    """
+    n = dist.shape[0]
+    D = dist.astype(np.float64).copy()
+    if method == "ward":
+        D = D * D
+    np.fill_diagonal(D, np.inf)
+    sizes = {i: 1 for i in range(n)}
+    ids = {i: i for i in range(n)}          # row -> cluster id
+    active = list(range(n))
+    Z = np.zeros((n - 1, 4))
+    big = np.full(D.shape, np.inf)
+    big[:D.shape[0], :D.shape[1]] = D
+    D = big
+    next_id = n
+    for step in range(n - 1):
+        # find closest active pair
+        sub = D[np.ix_(active, active)]
+        flat = np.argmin(sub)
+        a, b = divmod(flat, len(active))
+        if a == b:
+            raise RuntimeError("degenerate linkage state")
+        i, j = active[a], active[b]
+        if i > j:
+            i, j = j, i
+        dij = D[i, j]
+        d_rep = np.sqrt(dij) if method == "ward" else dij
+        Z[step] = [ids[i], ids[j], d_rep, sizes[i] + sizes[j]]
+        ni, nj = sizes[i], sizes[j]
+        # update distances of the merged cluster (stored in slot i)
+        for k in active:
+            if k in (i, j):
+                continue
+            nk = sizes[k]
+            dik, djk = D[i, k], D[j, k]
+            if method == "ward":
+                tot = ni + nj + nk
+                new = ((ni + nk) * dik + (nj + nk) * djk - nk * dij) / tot
+            else:
+                ai, aj, bb, g = _LW[method](ni, nj, nk)
+                new = ai * dik + aj * djk + bb * dij + g * abs(dik - djk)
+            D[i, k] = D[k, i] = new
+        sizes[i] = ni + nj
+        ids[i] = next_id
+        next_id += 1
+        active.remove(j)
+        D[j, :] = np.inf
+        D[:, j] = np.inf
+    return Z
+
+
+def cut(Z: np.ndarray, threshold: float) -> np.ndarray:
+    """Cluster labels from slicing the dendrogram at ``threshold``."""
+    n = Z.shape[0] + 1
+    parent = list(range(2 * n - 1))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for step in range(n - 1):
+        i, j, d, _ = Z[step]
+        if d <= threshold:
+            node = n + step
+            parent[find(int(i))] = node
+            parent[find(int(j))] = node
+    roots = {}
+    labels = np.zeros(n, np.int64)
+    for leaf in range(n):
+        r = find(leaf)
+        labels[leaf] = roots.setdefault(r, len(roots))
+    return labels
+
+
+def cut_k(Z: np.ndarray, k: int) -> np.ndarray:
+    """Labels for exactly k clusters (cut just below the (k-1)-th last merge)."""
+    n = Z.shape[0] + 1
+    k = max(1, min(k, n))
+    if k == 1:
+        return np.zeros(n, np.int64)
+    threshold = Z[n - k, 2] - 1e-12
+    return cut(Z, threshold)
+
+
+def dendrogram_order(Z: np.ndarray) -> list[int]:
+    """Leaf ordering for display."""
+    n = Z.shape[0] + 1
+    children = {}
+    for step in range(n - 1):
+        children[n + step] = (int(Z[step, 0]), int(Z[step, 1]))
+
+    def leaves(node):
+        if node < n:
+            return [node]
+        a, b = children[node]
+        return leaves(a) + leaves(b)
+
+    return leaves(2 * n - 2)
+
+
+# ---------------------------------------------------------------------------
+# K-Means (jit'd Lloyd iterations) + silhouette
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("k", "iters"))
+def _lloyd(X: jax.Array, init: jax.Array, k: int, iters: int):
+    def body(centers, _):
+        d = jnp.sum((X[:, None, :] - centers[None]) ** 2, axis=-1)
+        lab = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(lab, k, dtype=X.dtype)
+        counts = onehot.sum(0)
+        sums = onehot.T @ X
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1),
+                        centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(body, init, None, length=iters)
+    d = jnp.sum((X[:, None, :] - centers[None]) ** 2, axis=-1)
+    labels = jnp.argmin(d, axis=1)
+    inertia = jnp.sum(jnp.min(d, axis=1))
+    return centers, labels, inertia
+
+
+def kmeans(X: np.ndarray, k: int, seed: int = 0, iters: int = 50,
+           restarts: int = 4):
+    """K-Means with kmeans++ seeding; returns (centers, labels, inertia)."""
+    X = np.asarray(X, np.float64)
+    rng = np.random.default_rng(seed)
+    best = None
+    for _ in range(restarts):
+        centers = [X[rng.integers(len(X))]]
+        while len(centers) < k:
+            d2 = np.min(
+                [np.sum((X - c) ** 2, axis=1) for c in centers], axis=0)
+            tot = d2.sum()
+            if tot <= 0:
+                centers.append(X[rng.integers(len(X))])
+                continue
+            centers.append(X[rng.choice(len(X), p=d2 / tot)])
+        c, lab, inertia = _lloyd(jnp.asarray(X), jnp.asarray(np.stack(centers)),
+                                 k, iters)
+        inertia = float(inertia)
+        if best is None or inertia < best[2]:
+            best = (np.asarray(c), np.asarray(lab), inertia)
+    return best
+
+
+def silhouette_score(X: np.ndarray, labels: np.ndarray) -> float:
+    X = np.asarray(X, np.float64)
+    labels = np.asarray(labels)
+    n = len(X)
+    uniq = np.unique(labels)
+    if len(uniq) < 2 or n < 3:
+        return 0.0
+    D = euclidean_distance_matrix(X)
+    s = np.zeros(n)
+    for i in range(n):
+        same = labels == labels[i]
+        n_same = same.sum()
+        if n_same <= 1:
+            s[i] = 0.0
+            continue
+        a = D[i, same].sum() / (n_same - 1)
+        b = np.inf
+        for c in uniq:
+            if c == labels[i]:
+                continue
+            mask = labels == c
+            b = min(b, D[i, mask].mean())
+        s[i] = (b - a) / max(a, b) if max(a, b) > 0 else 0.0
+    return float(np.mean(s))
+
+
+def best_k_by_silhouette(X: np.ndarray, k_range=range(3, 18), seed: int = 0):
+    """Silhouette sweep (paper: K_util in [3, 17], optimum 3)."""
+    scores = {}
+    for k in k_range:
+        if k >= len(X):
+            break
+        _, labels, _ = kmeans(X, k, seed=seed)
+        scores[k] = silhouette_score(X, labels)
+    best = max(scores, key=scores.get)
+    return best, scores

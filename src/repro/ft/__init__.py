@@ -1,0 +1,2 @@
+from repro.ft.elastic import ElasticPlan, plan_new_mesh, rescale_batch
+from repro.ft.heartbeat import PreemptionHandler, StragglerMonitor

@@ -1,0 +1,46 @@
+"""Elastic re-meshing: plan a new mesh after losing hosts/pods.
+
+The production mesh is (pod, data, model); losing a pod or a data-slice
+shrinks the data-parallel extent while keeping the model extent (weights must
+still fit).  ``plan_new_mesh`` picks the largest valid mesh from the surviving
+device count; restore then re-shards the last checkpoint onto it
+(checkpoint/ckpt.py restore(shardings=...)).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import MeshConfig
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    old: MeshConfig
+    new: MeshConfig
+    lost_devices: int
+
+    @property
+    def data_scale(self) -> float:
+        return self.new.data_axis_size / self.old.data_axis_size
+
+
+def plan_new_mesh(mesh: MeshConfig, surviving_devices: int) -> ElasticPlan:
+    """Shrink the data/pod extent to the largest power-of-two that fits."""
+    model = mesh.model_axis_size
+    if surviving_devices < model:
+        raise RuntimeError(
+            f"only {surviving_devices} devices left; model axis needs {model}")
+    data = surviving_devices // model
+    # largest power of two <= data (keeps batch divisibility simple)
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    new = MeshConfig(shape=(p, model), axis_names=("data", "model"))
+    return ElasticPlan(old=mesh, new=new,
+                       lost_devices=mesh.num_devices - new.num_devices)
+
+
+def rescale_batch(global_batch: int, plan: ElasticPlan) -> int:
+    """Keep per-device batch constant: shrink global batch with the mesh."""
+    scaled = int(global_batch * plan.data_scale)
+    return max(scaled, 1)

@@ -1,0 +1,2 @@
+from repro.kernels.ops import flash_attention, rmsnorm, spike_hist, ssm_scan
+from repro.kernels import ref

@@ -1,0 +1,102 @@
+"""Flash attention (fwd) as a Pallas TPU kernel.
+
+TPU-native adaptation (DESIGN.md hardware-adaptation notes): blocks are
+MXU-aligned (q/kv block x head_dim multiples of 128), the online-softmax
+state (acc, m, l) lives in VMEM scratch and is carried across the kv grid
+dimension, which is declared "arbitrary" (sequential) so the carry is legal.
+Causal blocks above the diagonal are skipped with ``pl.when`` — the
+dominant win over the masked jnp fallback at long sequence.
+
+Layout: q (b, H, sq, dh), k/v (b, KV, skv, dh) — heads in the grid, seq x
+head_dim as the (sublane, lane) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               causal: bool, scale: float, block_q: int, block_k: int,
+               kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, block_q: int = 512,
+                         block_k: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    """q: (b, H, sq, dh); k/v: (b, KV, skv, dh) -> (b, H, sq, dh)."""
+    b, H, sq, dh = q.shape
+    KV, skv = k.shape[1], k.shape[2]
+    qper = H // KV
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+    grid = (b, H, sq // block_q, skv // block_k)
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, scale=dh ** -0.5,
+        block_q=block_q, block_k=block_k, kv_len=skv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, iq, ik, qper=qper: (ib, ih // qper, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, iq, ik, qper=qper: (ib, ih // qper, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, H, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # l
+        ],
+        interpret=interpret,
+    )(q, k, v)

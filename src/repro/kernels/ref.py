@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Exact softmax attention with GQA. q: (b, sq, H, dh); k/v: (b, skv, KV, dh)."""
+    b, sq, H, dh = q.shape
+    skv, KV = k.shape[1], k.shape[2]
+    qper = H // KV
+    qg = q.reshape(b, sq, KV, qper, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkpd,bjkd->bkpqj", qg, kf) * (dh ** -0.5)
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        mask = (qpos + (skv - sq)) >= kpos
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkpqj,bjkd->bqkpd", p, vf)
+    return o.reshape(b, sq, H, dh).astype(q.dtype)
+
+
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, D: jax.Array,
+                 h0: jax.Array | None = None):
+    """Selective-SSM scan oracle.
+
+    x, dt: (b, s, di); A: (di, ds); B, C: (b, s, ds); D: (di,).
+    Returns (y (b, s, di), h_last (b, di, ds)); fp32 internally.
+    """
+    b, s, di = x.shape
+    ds = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t, :, None] * Af[None])              # (b, di, ds)
+        u = (dtf[:, t] * xf[:, t])[:, :, None] * Bf[:, t, None, :]
+        h = a * h + u
+        y = jnp.einsum("bin,bn->bi", h, Cf[:, t])
+        return h, y
+
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    y = ys.transpose(1, 0, 2) + D.astype(jnp.float32)[None, None] * xf
+    return y.astype(x.dtype), h_last
+
+
+def spike_hist_ref(rel_power: jax.Array, n_bins: int, lo: float = 0.5,
+                   hi: float = 2.0) -> jax.Array:
+    """Histogram of relative power magnitudes r in [lo, hi) over n_bins.
+
+    Matches core.spikes.spike_vector *counts* (un-normalized), computed in
+    jnp. rel_power: (n,) float32.
+    """
+    r = rel_power.astype(jnp.float32)
+    width = (hi - lo) / n_bins
+    idx = jnp.clip(((r - lo) / width).astype(jnp.int32), 0, n_bins - 1)
+    valid = r >= lo
+    onehot = jax.nn.one_hot(idx, n_bins, dtype=jnp.float32) * valid[:, None]
+    return jnp.sum(onehot, axis=0)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """x: (n, d); scale: (d,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

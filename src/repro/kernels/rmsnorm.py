@@ -1,0 +1,37 @@
+"""Fused RMSNorm as a Pallas TPU kernel (row-tiled, fp32 statistics)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                # (rows, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x: jax.Array, scale: jax.Array, eps: float = 1e-5,
+                   block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (n, d); scale: (d,)."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    while n % block_rows:
+        block_rows -= 1
+    grid = (n // block_rows,)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, scale[None, :])

@@ -1,0 +1,67 @@
+"""Power-spike histogram as a Pallas TPU kernel — Minos's own telemetry
+binning (paper §4.1.1) as an on-device streaming op.
+
+A fleet-scale deployment bins millions of 1 kHz power samples per chip per
+day; doing it on-device (VPU compare + reduce per bin over VMEM-resident
+sample tiles, accumulated across the sequential grid) avoids shipping raw
+traces to the host.  The op is bandwidth-bound streaming: one pass over the
+samples, one (8, 128) accumulator tile resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_OUT_COLS = 128   # one padded output tile; n_bins <= 128
+
+
+def _hist_kernel(r_ref, o_ref, *, n_bins: int, lo: float, hi: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    r = r_ref[...].astype(jnp.float32)            # (rows, 128)
+    width = (hi - lo) / n_bins
+    # bin index per sample; out-of-range -> -1 (not counted)
+    idx = jnp.floor((r - lo) / width).astype(jnp.int32)
+    idx = jnp.where(r >= lo, jnp.minimum(idx, n_bins - 1), -1)
+    # accumulate counts: compare against the 128 bin ids held in the lanes
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, _OUT_COLS), 1)
+    counts = jnp.sum(
+        (idx.reshape(-1, 1) == bins).astype(jnp.float32), axis=0, keepdims=True)
+    o_ref[0:1, :] += counts
+
+
+def spike_hist_pallas(rel_power: jax.Array, n_bins: int, lo: float = 0.5,
+                      hi: float = 2.0, block_rows: int = 64,
+                      interpret: bool = True) -> jax.Array:
+    """rel_power: (n,) f32 relative magnitudes -> (n_bins,) counts.
+
+    n is padded to a (rows x 128) layout; padding uses -inf (never counted).
+    """
+    assert n_bins <= _OUT_COLS
+    n = rel_power.shape[0]
+    cols = 128
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    r = jnp.pad(rel_power.astype(jnp.float32), (0, pad),
+                constant_values=-jnp.inf).reshape(rows, cols)
+    block_rows = min(block_rows, rows)
+    while rows % block_rows:
+        block_rows -= 1
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_hist_kernel, n_bins=n_bins, lo=lo, hi=hi)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, _OUT_COLS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, _OUT_COLS), jnp.float32),
+        interpret=interpret,
+    )(r)
+    return out[0, :n_bins]

@@ -1,0 +1,80 @@
+"""Selective-SSM (Mamba-1) scan as a Pallas TPU kernel.
+
+TPU adaptation: ``d_inner`` is the 128-lane dimension (blocked at Bd), the
+per-(channel, state) hidden h lives in VMEM scratch (ds x Bd fp32) and is
+carried across the sequential seq-block grid dimension; within a block the
+recurrence runs as a ``fori_loop`` over time steps — each step is pure VPU
+work (exp, multiply-add) on (ds, Bd) tiles, with the state never leaving
+VMEM (the whole point vs materializing (s, di, ds) in HBM).
+
+Layouts: x, dt: (b, s, di); A: (ds, di) [transposed for lane alignment];
+B, C: (b, s, ds); y: (b, s, di).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref, *,
+                block_s: int):
+    # grid = (b, di-blocks, seq-blocks): seq is the innermost (sequential)
+    # dimension so the VMEM state carry is private to each (b, d-block)
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)            # (ds, Bd)
+    D = d_ref[...].astype(jnp.float32)            # (1, Bd)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)[None, :]       # (1, Bd)
+        x_t = x_ref[0, t].astype(jnp.float32)[None, :]
+        b_t = b_ref[0, t].astype(jnp.float32)[:, None]         # (ds, 1)
+        c_t = c_ref[0, t].astype(jnp.float32)[:, None]
+        a_t = jnp.exp(dt_t * A)                                # (ds, Bd)
+        h = a_t * h + (dt_t * x_t) * b_t
+        y_t = jnp.sum(c_t * h, axis=0, keepdims=True) + D * x_t
+        y_ref[0, t] = y_t[0].astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_ref[...])
+    h_ref[...] = h
+
+
+def ssm_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, D: jax.Array, *, block_s: int = 64,
+                    block_d: int = 256, interpret: bool = True) -> jax.Array:
+    """x, dt: (b, s, di); A: (di, ds); B, C: (b, s, ds); D: (di,) -> y."""
+    b, s, di = x.shape
+    ds = A.shape[1]
+    block_s = min(block_s, s)
+    block_d = min(block_d, di)
+    assert s % block_s == 0 and di % block_d == 0
+    grid = (b, di // block_d, s // block_s)
+    a_t = A.T                                 # (ds, di)
+    d_2d = D[None, :]                         # (1, di)
+    kernel = functools.partial(_ssm_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda ib, idd, isq: (ib, isq, idd)),
+            pl.BlockSpec((1, block_s, block_d), lambda ib, idd, isq: (ib, isq, idd)),
+            pl.BlockSpec((ds, block_d), lambda ib, idd, isq: (0, idd)),
+            pl.BlockSpec((1, block_s, ds), lambda ib, idd, isq: (ib, isq, 0)),
+            pl.BlockSpec((1, block_s, ds), lambda ib, idd, isq: (ib, isq, 0)),
+            pl.BlockSpec((1, block_d), lambda ib, idd, isq: (0, idd)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_d),
+                               lambda ib, idd, isq: (ib, isq, idd)),
+        out_shape=jax.ShapeDtypeStruct((b, s, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ds, block_d), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_t, B, C, d_2d)

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — proves the per-device footprint fits
+  * compiled.cost_analysis()    — XLA's own (scan-body-once) numbers
+  * the while-aware parsed cost — FLOPs / HBM bytes / collective bytes
+  * the 3-term roofline report  (analysis/roofline.py)
+
+Usage:
+  python -m repro.launch.dryrun --list
+  python -m repro.launch.dryrun --one ARCH SHAPE MESH   # single cell
+  python -m repro.launch.dryrun [--mesh single|multi|both] [--arch A] ...
+The orchestrating mode runs each cell in a subprocess (isolation against
+compiler memory growth) and writes results/dryrun/<mesh>/<arch>__<shape>.json
+incrementally, skipping cells that already have results.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))))
+RESULTS = os.path.join(REPO, "results", "dryrun")
+
+
+def _cell_microbatches(arch: str, shape_name: str) -> int:
+    """Gradient-accumulation depth for the big train cells (memory)."""
+    if shape_name != "train_4k":
+        return 1
+    big = {"jamba-1.5-large-398b": 8, "deepseek-v2-236b": 4,
+           "command-r-35b": 2}
+    return big.get(arch, 1)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             microbatches: int | None = None,
+             ssm_impl: str | None = None,
+             period: int | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.analysis import analyze_hlo_text, build_report
+    from repro.configs import ARCHS, SHAPES, shape_applicable
+    from repro.configs.base import RunConfig
+    from repro.launch.mesh import make_production_mesh, mesh_config
+    from repro.models import build_model, input_pspecs, input_specs
+    from repro.models.common import Topo
+    from repro.train.step import make_train_step, state_pspecs, state_shapes
+
+    cfg, shape = ARCHS[arch], SHAPES[shape_name]
+    import dataclasses
+    if ssm_impl:
+        cfg = dataclasses.replace(cfg, ssm_scan_impl=ssm_impl)
+    if period:
+        cfg = dataclasses.replace(cfg, layers_per_period=period)
+    ok, reason = shape_applicable(cfg.family, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "SKIP", "reason": reason}
+
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    mcfg = mesh_config(multi_pod=multi)
+    topo = Topo(mcfg)
+    n_chips = mcfg.num_devices
+    mb = microbatches if microbatches is not None else \
+        _cell_microbatches(arch, shape_name)
+
+    t0 = time.time()
+    kind = shape.kind
+    model = build_model(cfg, topo, kind=kind)
+    nshard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    with mesh:
+        if kind == "train":
+            run_cfg = RunConfig(microbatches=mb, moment_dtype=(
+                "bfloat16" if cfg.param_count() > 50e9 else "float32"))
+            step = make_train_step(model, run_cfg, topo)
+            sshapes = state_shapes(model, run_cfg)
+            sspecs = nshard(state_pspecs(model, topo))
+            ispecs = input_specs(cfg, shape)
+            ishard = nshard(input_pspecs(cfg, shape, topo))
+            lowered = jax.jit(step, in_shardings=(sspecs, ishard),
+                              out_shardings=(sspecs, None),
+                              donate_argnums=(0,)).lower(sshapes, ispecs)
+        elif kind == "prefill":
+            pshapes = model.param_shapes()
+            pspecs = nshard(model.param_specs())
+            ispecs = input_specs(cfg, shape)
+            ishard = nshard(input_pspecs(cfg, shape, topo))
+            lowered = jax.jit(model.prefill,
+                              in_shardings=(pspecs, ishard)).lower(
+                pshapes, ispecs)
+        else:  # decode
+            pshapes = model.param_shapes()
+            pspecs = nshard(model.param_specs())
+            cshapes = model.cache_shape_structs(shape.global_batch, shape.seq_len)
+            cspecs = nshard(model.cache_pspecs(shape.global_batch, shape.seq_len))
+            tshard = NamedSharding(
+                mesh, topo.pspec(("batch",), (shape.global_batch,)))
+            lowered = jax.jit(model.decode_step,
+                              in_shardings=(pspecs, cspecs, tshard, None),
+                              donate_argnums=(1,)).lower(
+                pshapes, cshapes,
+                jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(f"memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+          f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+          f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB")
+    ca = compiled.cost_analysis()
+    print(f"cost_analysis (XLA, scan-body-once): flops={ca.get('flops', 0):.3e} "
+          f"bytes={ca.get('bytes accessed', 0):.3e}")
+
+    t0 = time.time()
+    cost = analyze_hlo_text(compiled.as_text())
+    t_parse = time.time() - t0
+    report = build_report(cost, cfg, shape, mesh_name, n_chips)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "OK", "kind": kind, "microbatches": mb,
+        "n_chips": n_chips,
+        "memory": {
+            "args_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "xla_cost": {"flops": ca.get("flops", 0.0),
+                     "bytes": ca.get("bytes accessed", 0.0)},
+        "roofline": report.to_dict(),
+        "timings": {"lower_s": t_lower, "compile_s": t_compile,
+                    "parse_s": t_parse},
+    }
+    print(f"roofline: t_comp={report.t_compute*1e3:.1f}ms "
+          f"t_mem={report.t_memory*1e3:.1f}ms "
+          f"t_coll={report.t_collective*1e3:.1f}ms "
+          f"dominant={report.dominant} "
+          f"useful_ratio={report.useful_ratio:.3f} "
+          f"roofline_frac={report.roofline_fraction:.3f}")
+    return rec
+
+
+def all_cell_ids(mesh_sel: str) -> list[tuple[str, str, str]]:
+    from repro.configs import ARCHS, ALL_SHAPES
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[mesh_sel]
+    return [(a, s.name, m) for m in meshes for a in ARCHS for s in ALL_SHAPES]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--one", nargs=3, metavar=("ARCH", "SHAPE", "MESH"))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--ssm-impl", default=None, choices=["sequential", "associative"])
+    ap.add_argument("--period", type=int, default=None)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.one:
+        arch, shape, mesh = args.one
+        rec = run_cell(arch, shape, mesh, args.microbatches, args.ssm_impl,
+                       args.period)
+        out_dir = os.path.join(RESULTS, mesh)
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("WROTE", path, rec["status"])
+        return
+
+    cells = all_cell_ids(args.mesh)
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    for arch, shape, mesh in cells:
+        path = os.path.join(RESULTS, mesh, f"{arch}__{shape}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"skip (done): {arch} {shape} {mesh}")
+            continue
+        print(f"=== {arch} {shape} {mesh} ===", flush=True)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--one", arch, shape, mesh]
+        if args.microbatches is not None:
+            cmd += ["--microbatches", str(args.microbatches)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=3600)
+        sys.stdout.write(r.stdout[-3000:])
+        if r.returncode != 0:
+            os.makedirs(os.path.join(RESULTS, mesh), exist_ok=True)
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "FAIL",
+                           "error": r.stderr[-4000:]}, f, indent=1)
+            sys.stdout.write("FAILED\n" + r.stderr[-1500:] + "\n")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Training launcher with Minos frequency-cap selection as a first-class step.
+
+    PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \\
+        --steps 20 --minos-cap powercentric
+
+With ``--minos-cap``, the launcher (1) builds/loads the Minos reference
+library, (2) profiles this job once at the uncapped clock (the paper's
+low-cost profile — here via the telemetry simulator attached to this arch's
+kernel stream), (3) runs Algorithm 1 and applies the selected cap through the
+DVFS actuator before training starts.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, RunConfig
+from repro.configs.base import ShapeConfig
+from repro.core import MinosClassifier, select_optimal_freq
+from repro.core.reference_store import load_profiles, save_profiles
+from repro.models.common import SMOKE_TOPO, Topo
+from repro.sched import SimActuator
+from repro.telemetry import TPUPowerModel, build_reference_set, profile_once
+from repro.telemetry.kernel_stream import build_stream
+from repro.train import Trainer
+
+
+def minos_select_cap(arch: str, shape, objective: str, store_dir: str) -> float:
+    model = TPUPowerModel()
+    if os.path.isdir(store_dir) and os.path.exists(
+            os.path.join(store_dir, "profiles.json")):
+        refs = load_profiles(store_dir)
+    else:
+        print("[minos] building reference library (one-time)...")
+        refs = build_reference_set(model, target_duration=2.0)
+        save_profiles(refs, store_dir)
+    refs = [r for r in refs if not r.name.startswith(arch)]
+    clf = MinosClassifier(refs)
+    stream = build_stream(ARCHS[arch], shape)
+    target = profile_once(stream, model, model.spec.tdp_w)
+    sel = select_optimal_freq(target, clf)
+    cap = sel.cap(objective)
+    print(f"[minos] target={target.name} bin={sel.bin_size} "
+          f"pwr_nn={sel.power_neighbor} (d={sel.power_distance:.3f}) "
+          f"perf_nn={sel.util_neighbor} (d={sel.util_distance:.2f}) "
+          f"-> cap={cap:.2f} ({objective})")
+    return cap
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--minos-cap", choices=["powercentric", "perfcentric"],
+                    default=None)
+    ap.add_argument("--minos-store", default="/tmp/minos_reference_store")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    shape = SHAPES[args.shape]
+    actuator = SimActuator()
+    if args.minos_cap:
+        cap = minos_select_cap(args.arch, shape, args.minos_cap,
+                               args.minos_store)
+        actuator.set_cap(cap)
+
+    if args.smoke:
+        cfg = cfg.reduced()
+        shape = ShapeConfig("smoke", args.seq_len, args.batch, "train")
+        topo = SMOKE_TOPO
+    else:
+        from repro.launch.mesh import mesh_config
+        topo = Topo(mesh_config())
+
+    run_cfg = RunConfig(total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
+                        checkpoint_every=max(args.steps // 2, 1),
+                        checkpoint_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, shape, run_cfg, topo)
+    res = trainer.run(num_steps=args.steps)
+    print(f"ran {res.steps_run} steps; loss {res.losses[0]:.4f} -> "
+          f"{res.losses[-1]:.4f}; cap={actuator.get_cap():.2f}")
+
+
+if __name__ == "__main__":
+    main()

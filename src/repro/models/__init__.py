@@ -1,0 +1,2 @@
+from repro.models.common import ParamDef, ParamStore, Topo, SMOKE_TOPO, make_mesh_from_config
+from repro.models.model_zoo import build_model, input_specs, input_pspecs, make_batch

@@ -1,0 +1,244 @@
+"""Shared model plumbing: logical-axis sharding, parameter stores, topology.
+
+Sharding scheme (see DESIGN.md):
+
+* Logical axes map to mesh axes via per-topology rules:
+    - "batch"  -> ("pod", "data")      activations' batch dim
+    - "tp"     -> "model"              tensor-parallel dim (heads / ff / vocab /
+                                       d_inner / experts)
+    - "fsdp"   -> ("pod", "data")      ZeRO-3-style parameter sharding dim;
+                                       weights are gathered just-in-time by the
+                                       XLA SPMD partitioner inside each scan step
+    - "seq_tp" -> "model"              KV-cache sequence dim at decode, and
+                                       q-sequence for seq-sharded attention
+* Every rule application is divisibility-checked; a dim that does not divide
+  the mesh axes falls back to replication for that dim (never errors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Topology: mesh + logical rules
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Topo:
+    """Resolved mesh topology + logical->physical axis rules."""
+
+    mesh_cfg: MeshConfig
+    active: bool = True  # False -> all sharding constraints become no-ops
+
+    # ------------------------------------------------------------------
+    def axis_size(self, logical: str) -> int:
+        phys = self._phys(logical)
+        n = 1
+        for a in phys:
+            n *= self.mesh_cfg.shape[self.mesh_cfg.axis_names.index(a)]
+        return n
+
+    def _phys(self, logical: str) -> tuple[str, ...]:
+        names = self.mesh_cfg.axis_names
+        if logical in ("batch", "fsdp"):
+            return tuple(a for a in ("pod", "data") if a in names)
+        if logical in ("tp", "seq_tp"):
+            return tuple(a for a in ("model",) if a in names)
+        if logical == "all":
+            return tuple(a for a in ("pod", "data", "model") if a in names)
+        if logical == "none":
+            return ()
+        raise KeyError(f"unknown logical axis {logical!r}")
+
+    def resolve(self, logical: str | None, dim_size: int) -> tuple[str, ...] | None:
+        """Physical axes for a dim, or None if not divisible / unsharded.
+
+        Multi-axis logicals fall back to a suffix of their axes when the full
+        product does not divide (e.g. 16 experts over (pod=2, data=16) ->
+        shard over data only)."""
+        if logical is None:
+            return None
+        phys = self._phys(logical)
+        while phys:
+            n = 1
+            for a in phys:
+                n *= self.mesh_cfg.shape[self.mesh_cfg.axis_names.index(a)]
+            if n > 0 and dim_size % n == 0:
+                return phys
+            phys = phys[1:]
+        return None
+
+    def pspec(self, axes: tuple[str | None, ...], shape: tuple[int, ...]) -> P:
+        entries = []
+        for logical, dim in zip(axes, shape):
+            phys = self.resolve(logical, dim)
+            if phys is None:
+                entries.append(None)
+            elif len(phys) == 1:
+                entries.append(phys[0])
+            else:
+                entries.append(phys)
+        # trim trailing Nones (canonical form)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def shard(self, x: jax.Array, *axes: str | None) -> jax.Array:
+        """Apply a sharding constraint on activations (no-op when inactive)."""
+        if not self.active:
+            return x
+        spec = self.pspec(tuple(axes), x.shape)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+SMOKE_TOPO = Topo(MeshConfig(shape=(1, 1), axis_names=("data", "model")), active=False)
+
+
+def make_mesh_from_config(mesh_cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(
+        mesh_cfg.shape,
+        mesh_cfg.axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axis_names),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter store
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]       # logical axis per dim
+    init: str = "normal"               # normal | zeros | ones | mamba_a | mamba_dt
+    scale: float | None = None         # None -> 1/sqrt(fan_in)
+    dtype: str = "bfloat16"
+
+    def fan_in(self) -> int:
+        return self.shape[0] if self.shape else 1
+
+
+class ParamStore:
+    """Collects ``ParamDef``s keyed by '/'-separated paths; materializes
+    init values / shape structs / PartitionSpecs as congruent nested dicts."""
+
+    def __init__(self) -> None:
+        self.defs: dict[str, ParamDef] = {}
+
+    def add(self, path: str, d: ParamDef) -> None:
+        if path in self.defs:
+            raise ValueError(f"duplicate param {path}")
+        self.defs[path] = d
+
+    def stacked(self, n: int, prefix: str, sub: "ParamStore") -> None:
+        """Add all of ``sub``'s params with a leading stacking dim of ``n``."""
+        for path, d in sub.defs.items():
+            self.add(
+                f"{prefix}/{path}",
+                dataclasses.replace(d, shape=(n, *d.shape), axes=(None, *d.axes)),
+            )
+
+    # -- materialization ------------------------------------------------
+    def _nest(self, leaves: dict[str, Any]) -> dict[str, Any]:
+        tree: dict[str, Any] = {}
+        for path, v in leaves.items():
+            parts = path.split("/")
+            node = tree
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = v
+        return tree
+
+    def shape_structs(self) -> dict[str, Any]:
+        return self._nest(
+            {
+                p: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype))
+                for p, d in self.defs.items()
+            }
+        )
+
+    def pspecs(self, topo: Topo) -> dict[str, Any]:
+        return self._nest({p: topo.pspec(d.axes, d.shape) for p, d in self.defs.items()})
+
+    def shardings(self, mesh: Mesh, topo: Topo) -> dict[str, Any]:
+        return self._nest(
+            {
+                p: NamedSharding(mesh, topo.pspec(d.axes, d.shape))
+                for p, d in self.defs.items()
+            }
+        )
+
+    def init(self, key: jax.Array) -> dict[str, Any]:
+        leaves = {}
+        paths = sorted(self.defs)
+        keys = jax.random.split(key, max(len(paths), 1))
+        for k, path in zip(keys, paths):
+            leaves[path] = _init_param(k, self.defs[path])
+        return self._nest(leaves)
+
+    def num_params(self) -> int:
+        return sum(int(np.prod(d.shape)) for d in self.defs.values())
+
+
+def _init_param(key: jax.Array, d: ParamDef) -> jax.Array:
+    dtype = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "mamba_a":
+        # A_log init: log(1..d_state) broadcast over d_inner rows (mamba1)
+        n = d.shape[-1]
+        a = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), d.shape)
+        return a.astype(dtype)
+    if d.init == "mamba_dt":
+        # dt bias: inverse-softplus of uniform dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(dtype)
+    scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(d.fan_in(), 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc numerics
+# ---------------------------------------------------------------------------
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, vocab_size: int
+) -> jax.Array:
+    """Mean CE over tokens, computed stably on (possibly vocab-sharded) logits.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    ``take_along_axis`` so a vocab-sharded logits tensor reduces with a tiny
+    psum instead of an all-gather.  ``labels`` outside [0, vocab_size) are
+    masked out.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = (labels[..., None] == jnp.arange(v, dtype=labels.dtype)).astype(jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    mask = (labels >= 0) & (labels < vocab_size)
+    loss = (lse - gold) * mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def maybe_remat(fn: Callable, enabled: bool) -> Callable:
+    if not enabled:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def dtype_of(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)

@@ -1,0 +1,242 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB: ``input_specs()`` supplies precomputed frame
+embeddings (batch, frames, d_model). Positional information is sinusoidal on
+both sides (whisper uses learned decoder positions; sinusoidal keeps the
+parameter tree shape-independent — noted in DESIGN.md).
+
+Decode uses a self-attention KV cache (seq-sharded) plus per-layer
+cross-attention K/V caches precomputed from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import Attention
+from repro.models.common import ParamStore, Topo, maybe_remat
+from repro.models.layers import Embedding, Mlp, Norm, chunked_ce_loss
+
+
+def sinusoidal(positions: jax.Array, dim: int) -> jax.Array:
+    """(s,) int32 -> (s, dim) float32 sinusoidal embeddings."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, topo: Topo, kind: str = "train"):
+        assert kind in ("train", "prefill", "decode")
+        self.cfg, self.topo, self.kind = cfg, topo, kind
+        layout = "decode_rp" if kind == "decode" else (
+            "megatron" if cfg.num_heads % max(topo.axis_size("tp"), 1) == 0 else "fsdp_sp")
+        self.layout = layout
+        d = cfg.d_model
+
+        def attn(name, cross=False, causal=True, lo=None):
+            return Attention(name, d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                             layout=lo or layout, use_rope=False, qkv_bias=cfg.qkv_bias,
+                             out_bias=cfg.attn_out_bias, causal=causal, is_cross=cross)
+
+        # encoder blocks (always full-sequence, even when decoding happens later)
+        enc_layout = "megatron" if kind != "decode" else "decode_rp"
+        self.enc_attn = attn("enc_attn/core", cross=False, causal=False, lo=enc_layout)
+        self.enc_norm1 = Norm("enc_attn/norm", d, cfg.norm_type, cfg.norm_eps)
+        self.enc_mlp = Mlp("enc_mlp/core", d, cfg.d_ff, cfg.mlp_activation)
+        self.enc_norm2 = Norm("enc_mlp/norm", d, cfg.norm_type, cfg.norm_eps)
+        # decoder blocks
+        self.dec_self = attn("dec_self/core", cross=False, causal=True)
+        self.dec_norm1 = Norm("dec_self/norm", d, cfg.norm_type, cfg.norm_eps)
+        self.dec_cross = attn("dec_cross/core", cross=True)
+        self.dec_norm2 = Norm("dec_cross/norm", d, cfg.norm_type, cfg.norm_eps)
+        self.dec_mlp = Mlp("dec_mlp/core", d, cfg.d_ff, cfg.mlp_activation,
+                           zero3=kind != "decode")
+        self.dec_norm3 = Norm("dec_mlp/norm", d, cfg.norm_type, cfg.norm_eps)
+
+        self.embedding = Embedding("embed", cfg.padded_vocab, d)
+        self.enc_final = Norm("enc_final_norm", d, cfg.norm_type, cfg.norm_eps)
+        self.final_norm = Norm("final_norm", d, cfg.norm_type, cfg.norm_eps)
+
+        store = ParamStore()
+        self.embedding.register(store)
+        self.enc_final.register(store)
+        self.final_norm.register(store)
+        enc_store = ParamStore()
+        for blk, nm in ((self.enc_norm1, None), (self.enc_attn, None),
+                        (self.enc_norm2, None), (self.enc_mlp, None)):
+            blk.register(enc_store)
+        store.stacked(cfg.num_encoder_layers, "enc_layers", enc_store)
+        dec_store = ParamStore()
+        for blk in (self.dec_norm1, self.dec_self, self.dec_norm2, self.dec_cross,
+                    self.dec_norm3, self.dec_mlp):
+            blk.register(dec_store)
+        store.stacked(cfg.num_layers, "dec_layers", dec_store)
+        self.store = store
+        # see transformer.LM: constrain per-layer params (and their
+        # cotangents) to storage sharding inside the scan bodies
+        self._enc_pspecs = enc_store.pspecs(topo)
+        self._dec_pspecs = dec_store.pspecs(topo)
+
+    def _constrain(self, layer_params, pspecs):
+        if not self.topo.active:
+            return layer_params
+        return jax.tree.map(jax.lax.with_sharding_constraint, layer_params, pspecs)
+
+    # ------------------------------------------------------------------
+    def init_params(self, key):
+        return self.store.init(key)
+
+    def param_shapes(self):
+        return self.store.shape_structs()
+
+    def param_specs(self):
+        return self.store.pspecs(self.topo)
+
+    # ------------------------------------------------------------------
+    def encode(self, params: dict, frames: jax.Array) -> jax.Array:
+        """frames: (b, s_enc, d) stub embeddings -> encoder output."""
+        cfg, topo = self.cfg, self.topo
+        b, s, d = frames.shape
+        pos = jnp.arange(s, dtype=jnp.int32)
+        h = frames + sinusoidal(pos, d)[None].astype(frames.dtype)
+        h = topo.shard(h, "batch", None, None)
+
+        def body(h, lp):
+            lp = self._constrain(lp, self._enc_pspecs)
+            x = self.enc_norm1(lp["enc_attn"]["norm"], h)
+            h = h + self.enc_attn(lp["enc_attn"]["core"], x, pos, topo)
+            x = self.enc_norm2(lp["enc_mlp"]["norm"], h)
+            h = h + self.enc_mlp(lp["enc_mlp"]["core"], x, topo)
+            h = topo.shard(h, "batch", "seq_tp", None)
+            return h, ()
+
+        body = maybe_remat(body, cfg.remat and self.kind == "train")
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+        return self.enc_final(params["enc_final_norm"], h)
+
+    def _decoder_stack(self, params, h, positions, enc_out, enc_pos, collect: bool):
+        cfg, topo = self.cfg, self.topo
+
+        def body(carry, lp):
+            h = carry
+            lp = self._constrain(lp, self._dec_pspecs)
+            kvs = {}
+            x = self.dec_norm1(lp["dec_self"]["norm"], h)
+            if collect:
+                out, kv = self.dec_self(lp["dec_self"]["core"], x, positions, topo,
+                                        return_kv=True)
+                kvs["self"] = {"k": kv[0], "v": kv[1]}
+            else:
+                out = self.dec_self(lp["dec_self"]["core"], x, positions, topo)
+            h = h + out
+            x = self.dec_norm2(lp["dec_cross"]["norm"], h)
+            if collect:
+                out, kv = self.dec_cross(lp["dec_cross"]["core"], x, positions, topo,
+                                         memory=enc_out, memory_positions=enc_pos,
+                                         return_kv=True)
+                kvs["cross"] = {"k": kv[0], "v": kv[1]}
+            else:
+                out = self.dec_cross(lp["dec_cross"]["core"], x, positions, topo,
+                                     memory=enc_out, memory_positions=enc_pos)
+            h = h + out
+            x = self.dec_norm3(lp["dec_mlp"]["norm"], h)
+            h = h + self.dec_mlp(lp["dec_mlp"]["core"], x, topo)
+            h = topo.shard(h, "batch", "seq_tp", None)
+            return h, kvs
+
+        body = maybe_remat(body, cfg.remat and self.kind == "train")
+        return jax.lax.scan(body, h, params["dec_layers"])
+
+    # ------------------------------------------------------------------
+    def loss(self, params: dict, batch: dict):
+        cfg, topo = self.cfg, self.topo
+        frames, tokens, labels = batch["frames"], batch["tokens"], batch["labels"]
+        enc_out = self.encode(params, frames)
+        b, s = tokens.shape
+        pos = jnp.arange(s, dtype=jnp.int32)
+        h = self.embedding.embed(params["embed"], tokens, topo)
+        h = h + sinusoidal(pos, cfg.d_model)[None].astype(h.dtype)
+        enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        h, _ = self._decoder_stack(params, h, pos, enc_out, enc_pos, False)
+        h = self.final_norm(params["final_norm"], h)
+        loss = chunked_ce_loss(self.embedding, params["embed"], h, labels,
+                               cfg.vocab_size, topo)
+        return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params: dict, batch: dict):
+        """Encode audio + prefill decoder tokens -> (last logits, caches)."""
+        cfg, topo = self.cfg, self.topo
+        frames, tokens = batch["frames"], batch["tokens"]
+        enc_out = self.encode(params, frames)
+        b, s = tokens.shape
+        pos = jnp.arange(s, dtype=jnp.int32)
+        h = self.embedding.embed(params["embed"], tokens, topo)
+        h = h + sinusoidal(pos, cfg.d_model)[None].astype(h.dtype)
+        enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        h, kvs = self._decoder_stack(params, h, pos, enc_out, enc_pos, True)
+        h = self.final_norm(params["final_norm"], h)
+        logits = self.embedding.logits(params["embed"], h[:, -1], topo)
+        caches = {}
+        for grp in ("self", "cross"):
+            caches[grp] = {
+                kk: topo.shard(kvs[grp][kk], None, "batch", "seq_tp", None, None)
+                for kk in ("k", "v")}
+        return logits, caches
+
+    def decode_step(self, params: dict, caches: dict, tokens: jax.Array, t):
+        cfg, topo = self.cfg, self.topo
+        h = self.embedding.embed(params["embed"], tokens, topo)
+        h = h + sinusoidal(jnp.full((1,), t, jnp.int32), cfg.d_model)[0].astype(h.dtype)
+
+        def body(h, xs):
+            lp, lc = xs
+            new_c = {}
+            x = self.dec_norm1(lp["dec_self"]["norm"], h)
+            out, (k_c, v_c) = self.dec_self.decode(
+                lp["dec_self"]["core"], x, t, lc["self"]["k"], lc["self"]["v"], topo)
+            new_c["self"] = {"k": k_c, "v": v_c}
+            h = h + out
+            x = self.dec_norm2(lp["dec_cross"]["norm"], h)
+            out, _ = self.dec_cross.decode(
+                lp["dec_cross"]["core"], x, t, lc["cross"]["k"], lc["cross"]["v"], topo,
+                update_cache=False)
+            new_c["cross"] = lc["cross"]
+            h = h + out
+            x = self.dec_norm3(lp["dec_mlp"]["norm"], h)
+            h = h + self.dec_mlp(lp["dec_mlp"]["core"], x, topo)
+            return h, new_c
+
+        h, new_caches = jax.lax.scan(body, h, (params["dec_layers"], caches))
+        h = self.final_norm(params["final_norm"], h)
+        logits = self.embedding.logits(params["embed"], h, topo)
+        return logits, new_caches
+
+    # ------------------------------------------------------------------
+    def cache_shape_structs(self, batch: int, seq: int,
+                            memory_len: int | None = None) -> dict:
+        """``seq`` sizes the growing self-attention cache; ``memory_len``
+        (default: seq) is the fixed encoder-memory length for cross caches."""
+        cfg = self.cfg
+        n = cfg.num_layers
+        mem = memory_len if memory_len is not None else seq
+        kvd = (n, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+        kvx = (n, batch, mem, cfg.num_kv_heads, cfg.head_dim)
+        return {
+            "self": {"k": jax.ShapeDtypeStruct(kvd, jnp.bfloat16),
+                     "v": jax.ShapeDtypeStruct(kvd, jnp.bfloat16)},
+            "cross": {"k": jax.ShapeDtypeStruct(kvx, jnp.bfloat16),
+                      "v": jax.ShapeDtypeStruct(kvx, jnp.bfloat16)},
+        }
+
+    def cache_pspecs(self, batch: int, seq: int,
+                     memory_len: int | None = None) -> dict:
+        topo = self.topo
+        structs = self.cache_shape_structs(batch, seq, memory_len)
+        axes = (None, "batch", "seq_tp", None, None)
+        return {
+            grp: {k: topo.pspec(axes, st.shape) for k, st in entry.items()}
+            for grp, entry in structs.items()
+        }

@@ -1,0 +1,181 @@
+"""Core layers: norms, RoPE, MLPs, embeddings/logits.
+
+All weights are stored 2D-sharded: a tensor-parallel dim on the "model" mesh
+axis ("tp") and a ZeRO-3/FSDP dim on ("pod","data") ("fsdp"); the XLA SPMD
+partitioner all-gathers the fsdp dim just-in-time inside each scan step
+(MaxText-style), so optimizer state and gradients stay fully sharded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, ParamStore, Topo, cross_entropy_loss
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Norm:
+    name: str
+    dim: int
+    kind: str = "rmsnorm"   # rmsnorm | layernorm
+    eps: float = 1e-5
+
+    def register(self, store: ParamStore) -> None:
+        store.add(f"{self.name}/scale", ParamDef((self.dim,), (None,), init="ones"))
+        if self.kind == "layernorm":
+            store.add(f"{self.name}/bias", ParamDef((self.dim,), (None,), init="zeros"))
+
+    def __call__(self, p: dict, x: jax.Array) -> jax.Array:
+        dt = x.dtype
+        xf = x.astype(jnp.float32)
+        if self.kind == "layernorm":
+            mu = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+            y = (xf - mu) * jax.lax.rsqrt(var + self.eps)
+            return (y * p["scale"].astype(jnp.float32)
+                    + p["bias"].astype(jnp.float32)).astype(dt)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + self.eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                       # (dim/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, dim/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., seq, 1, dim/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU), column+row tensor-parallel over "model"
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Mlp:
+    name: str
+    d_model: int
+    d_ff: int
+    activation: str = "swiglu"   # swiglu | gelu
+    mode: str = "tp"             # tp: ff column/row-parallel over "model";
+                                 # gathered: weights JIT-gathered, activations
+                                 # stay sequence-sharded (fsdp_sp archs)
+    zero3: bool = True           # ZeRO-3 storage dim (off for decode layouts)
+
+    def register(self, store: ParamStore) -> None:
+        d, f = self.d_model, self.d_ff
+        fs = "fsdp" if self.zero3 else None
+        if self.activation == "swiglu":
+            store.add(f"{self.name}/w_gate", ParamDef((d, f), (fs, "tp")))
+            store.add(f"{self.name}/w_up", ParamDef((d, f), (fs, "tp")))
+        else:
+            store.add(f"{self.name}/w_up", ParamDef((d, f), (fs, "tp")))
+        store.add(f"{self.name}/w_down", ParamDef((f, d), ("tp", fs)))
+
+    def __call__(self, p: dict, x: jax.Array, topo: Topo) -> jax.Array:
+        two_d = x.ndim == 2
+        seq_ax = "seq_tp" if (self.mode == "gathered" and not two_d) else None
+        ff_ax = None if self.mode == "gathered" else "tp"
+        if self.activation == "swiglu":
+            g = x @ p["w_gate"]
+            u = x @ p["w_up"]
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        else:
+            u = x @ p["w_up"]
+            h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+        if two_d:
+            h = topo.shard(h, "batch", ff_ax)
+            out = h @ p["w_down"]
+            return topo.shard(out, "batch", None)
+        h = topo.shard(h, "batch", seq_ax, ff_ax)
+        out = h @ p["w_down"]
+        # row-parallel output reduce-scattered onto the seq-sharded residual
+        # (see attention._out; §Perf C1)
+        return topo.shard(out, "batch", "seq_tp", None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + logits head
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Embedding:
+    name: str
+    vocab: int        # padded vocab
+    d_model: int
+    tie: bool = False
+    seq_sharded: bool = False   # fsdp_sp archs: residual stream seq-sharded
+
+    def register(self, store: ParamStore) -> None:
+        # table is vocab-sharded over "model" (XLA partitions the gather via
+        # clamp+select+psum) and ZeRO-sharded on d; head is vocab-column-TP
+        store.add(
+            f"{self.name}/table",
+            ParamDef((self.vocab, self.d_model), ("tp", "fsdp"), scale=1.0),
+        )
+        if not self.tie:
+            store.add(
+                f"{self.name}/head",
+                ParamDef((self.d_model, self.vocab), ("fsdp", "tp")),
+            )
+
+    def embed(self, p: dict, tokens: jax.Array, topo: Topo) -> jax.Array:
+        # vocab-sharded table: XLA partitions the row gather (masked local
+        # gather + psum); the backward scatter-add stays vocab-local.
+        out = jnp.take(p["table"], tokens, axis=0)
+        if out.ndim == 2:   # single-token decode (b, d)
+            return topo.shard(out, "batch", None)
+        return topo.shard(out, "batch", "seq_tp", None)
+
+    def logits(self, p: dict, h: jax.Array, topo: Topo) -> jax.Array:
+        # gather the residual over seq (if seq-sharded) once, then vocab-TP
+        if h.ndim == 3:
+            h = topo.shard(h, "batch", None, None)
+        w = p["table"].T if self.tie else p["head"]
+        out = h.astype(jnp.float32) @ w.astype(jnp.float32)
+        if out.ndim == 2:
+            return topo.shard(out, "batch", "tp")
+        return topo.shard(out, "batch", None, "tp")
+
+
+def chunked_ce_loss(embedding: Embedding, emb_params: dict, h: jax.Array,
+                    labels: jax.Array, vocab_size: int, topo: Topo) -> jax.Array:
+    """Cross-entropy in seq chunks so fp32 logits never materialize at full
+    sequence length (a 256k-vocab 1M-token step would need ~1 TB otherwise)."""
+    b, s, d = h.shape
+    chunk = s
+    for c in (512, 256, 128, 64):
+        if s % c == 0 and s > c:
+            chunk = c
+            break
+    nc = s // chunk
+    h = topo.shard(h, "batch", None, None)
+    hs = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h_c, l_c = xs
+        logits = embedding.logits(emb_params, h_c, topo)
+        loss = cross_entropy_loss(logits, l_c, vocab_size)
+        return carry + loss, ()
+
+    # remat: per-chunk logits are recomputed in the backward pass rather
+    # than saved (nc x 0.5 GiB/device otherwise)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / nc

@@ -1,0 +1,63 @@
+"""Model zoo entry point: build models + input specs per (arch x shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import Topo
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+
+
+def build_model(cfg: ModelConfig, topo: Topo, kind: str = "train"):
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg, topo, kind)
+    return LM(cfg, topo, kind)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``train``/``prefill``: full (batch, seq) token batches (+ stub modality
+    embeddings for vlm/audio).  ``decode``: one new token per sequence.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+        return specs
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), bf16)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+    return specs
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, topo: Topo) -> dict:
+    """PartitionSpecs congruent with input_specs."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, st in specs.items():
+        axes: tuple = ("batch",) + (None,) * (len(st.shape) - 1)
+        out[name] = topo.pspec(axes, st.shape)
+    return out
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array) -> dict:
+    """Materialize a random batch matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for i, (name, st) in enumerate(sorted(specs.items())):
+        k = jax.random.fold_in(key, i)
+        if st.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, st.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, st.shape, jnp.float32).astype(st.dtype) * 0.02
+    return out

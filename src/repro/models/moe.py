@@ -1,0 +1,174 @@
+"""Mixture-of-Experts with GShard-style capacity-limited dense dispatch.
+
+Two expert placements (picked per arch by divisibility, see DESIGN.md):
+  * EP  — expert dim sharded over "model" (deepseek 160/16, jamba 16/16);
+          expert d_model dim additionally ZeRO-sharded over ("pod","data").
+  * TP  — experts replicated, expert d_ff sharded over "model"
+          (granite: 40 experts don't divide 16).
+
+Dispatch/combine are one-hot einsums (MXU-friendly, fully static shapes).
+Tokens are grouped into (G, S) groups; capacity C = ceil(S*topk*cf / E).
+Dropped tokens (over capacity) pass through the residual unchanged — the
+standard capacity-dropping semantics.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, ParamStore, Topo
+
+
+@dataclass(frozen=True)
+class MoE:
+    name: str
+    d_model: int
+    num_experts: int
+    top_k: int
+    d_ff: int
+    num_shared: int = 0
+    group_size: int = 256
+    capacity_factor: float = 1.25
+    placement: str = "ep"
+    # ep         (train/prefill): experts over "model"; d dim ZeRO-3 sharded
+    # gathered   (train/prefill, fsdp_sp archs): weights JIT-gathered, tokens
+    #            sharded over all axes
+    # ep_decode  (decode): experts over ("pod","data"), ff over "model",
+    #            tokens replicated (single group) — fully-resident weights
+    # tp_decode  (decode, small E): experts replicated, ff over "model"
+    activation: str = "swiglu"
+
+    @property
+    def token_axis(self) -> str | None:
+        return {"ep": "batch", "gathered": "all",
+                "ep_decode": None, "tp_decode": "batch"}[self.placement]
+
+    @property
+    def expert_axis(self) -> str | None:
+        return {"ep": "tp", "gathered": None,
+                "ep_decode": "fsdp", "tp_decode": None}[self.placement]
+
+    @property
+    def ff_axis(self) -> str | None:
+        return {"ep": None, "gathered": None,
+                "ep_decode": "tp", "tp_decode": "tp"}[self.placement]
+
+    def capacity(self, group_tokens: int) -> int:
+        c = math.ceil(group_tokens * self.top_k * self.capacity_factor / self.num_experts)
+        return max(c, 1)
+
+    def register(self, store: ParamStore) -> None:
+        d, E, f = self.d_model, self.num_experts, self.d_ff
+        n = self.name
+        if self.placement == "ep":
+            ax_in = ("tp", "fsdp", None)       # (E, d, f)
+            ax_out = ("tp", None, "fsdp")      # (E, f, d)
+            ax_sh_in, ax_sh_out = ("fsdp", "tp"), ("tp", "fsdp")
+        elif self.placement == "gathered":
+            ax_in = (None, "fsdp", "tp")
+            ax_out = (None, "tp", "fsdp")
+            ax_sh_in, ax_sh_out = ("fsdp", "tp"), ("tp", "fsdp")
+        elif self.placement == "ep_decode":
+            ax_in = ("fsdp", None, "tp")
+            ax_out = ("fsdp", "tp", None)
+            ax_sh_in, ax_sh_out = (None, "tp"), ("tp", None)
+        else:  # tp_decode
+            ax_in = (None, None, "tp")
+            ax_out = (None, "tp", None)
+            ax_sh_in, ax_sh_out = (None, "tp"), ("tp", None)
+        store.add(f"{n}/router", ParamDef((d, E), (None, None), scale=0.02))
+        store.add(f"{n}/w_gate", ParamDef((E, d, f), ax_in))
+        store.add(f"{n}/w_up", ParamDef((E, d, f), ax_in))
+        store.add(f"{n}/w_down", ParamDef((E, f, d), ax_out))
+        if self.num_shared:
+            fs = self.num_shared * f
+            store.add(f"{n}/ws_gate", ParamDef((d, fs), ax_sh_in))
+            store.add(f"{n}/ws_up", ParamDef((d, fs), ax_sh_in))
+            store.add(f"{n}/ws_down", ParamDef((fs, d), ax_sh_out))
+
+    # ------------------------------------------------------------------
+    def _route(self, p: dict, xg: jax.Array):
+        """xg: (G, S, d) -> combine (G,S,E,C) bf16, dispatch mask, aux loss."""
+        G, S, d = xg.shape
+        E, k = self.num_experts, self.top_k
+        C = self.capacity(S)
+        # keep the big operand in bf16; accumulate in f32 (upcasting xg would
+        # materialize the full token tensor in f32)
+        logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(xg.dtype),
+                            preferred_element_type=jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)             # (G,S,E)
+        topv, topi = jax.lax.top_k(probs, k)                # (G,S,k)
+        topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+        # aux load-balancing loss (Switch): E * sum(frac_tokens * frac_probs)
+        sel_onehot = jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32)
+        frac_tokens = jnp.mean(sel_onehot, axis=(0, 1))
+        frac_probs = jnp.mean(probs, axis=(0, 1))
+        aux = E * jnp.sum(frac_tokens * frac_probs)
+
+        combine = jnp.zeros((G, S, E, C), jnp.float32)
+        counts = jnp.zeros((G, E), jnp.float32)             # capacity used so far
+        for j in range(k):
+            mask_j = jax.nn.one_hot(topi[..., j], E, dtype=jnp.float32)   # (G,S,E)
+            pos_j = counts[:, None, :] + jnp.cumsum(mask_j, axis=1) - mask_j
+            keep = mask_j * (pos_j < C)
+            onehot_pos = jax.nn.one_hot(pos_j.astype(jnp.int32), C, dtype=jnp.float32)
+            combine = combine + keep[..., None] * onehot_pos * topv[..., j][..., None, None]
+            counts = counts + jnp.sum(keep, axis=1)
+        dispatch = (combine > 0).astype(xg.dtype)
+        return combine.astype(jnp.float32), dispatch, aux
+
+    def _experts(self, p: dict, xe: jax.Array, topo: Topo) -> jax.Array:
+        """xe: (E, G, C, d) -> (E, G, C, d)."""
+        xe = topo.shard(xe, self.expert_axis, self.token_axis, None, None)
+        g = jnp.einsum("egcd,edf->egcf", xe, p["w_gate"])
+        u = jnp.einsum("egcd,edf->egcf", xe, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+        h = topo.shard(h, self.expert_axis, self.token_axis, None, self.ff_axis)
+        out = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+        return topo.shard(out, self.expert_axis, self.token_axis, None, None)
+
+    def _shared(self, p: dict, x: jax.Array, topo: Topo) -> jax.Array:
+        two_d = x.ndim == 2
+        seq_ax = "seq_tp" if (self.placement == "gathered" and not two_d) else None
+        ff_ax = None if self.placement == "gathered" else "tp"
+        g = x @ p["ws_gate"]
+        u = x @ p["ws_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        if two_d:
+            h = topo.shard(h, "batch", ff_ax)
+            return topo.shard(h @ p["ws_down"], "batch", None)
+        h = topo.shard(h, "batch", seq_ax, ff_ax)
+        out = h @ p["ws_down"]
+        return topo.shard(out, "batch", seq_ax, None)
+
+    def __call__(self, p: dict, x: jax.Array, topo: Topo):
+        """x: (b, s, d) or (b, d) -> (out, aux_loss)."""
+        two_d = x.ndim == 2
+        xs = x[:, None, :] if two_d else x
+        b, s, d = xs.shape
+        T = b * s
+        # group count must stay divisible by the token-sharding axes, and
+        # S must divide T exactly (snap to the largest divisor)
+        n_shards = max(topo.axis_size(self.token_axis), 1) if self.token_axis else 1
+        S = min(self.group_size, max(T // n_shards, 1))
+        while S > 1 and T % S:
+            S -= 1
+        G = T // S
+        xg = xs.reshape(G, S, d)
+        xg = topo.shard(xg, self.token_axis, None, None)
+        combine, dispatch, aux = self._route(p, xg)
+        xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+        ye = self._experts(p, xe, topo)
+        yg = jnp.einsum("gsec,egcd->gsd", combine.astype(ye.dtype), ye)
+        out = yg.reshape(b, s, d)
+        seq_ax = "seq_tp" if (self.placement == "gathered" and s > 1) else None
+        out = topo.shard(out, "batch", seq_ax, None)
+        if self.num_shared:
+            out = out + self._shared(p, xs, topo)
+        if two_d:
+            out = out[:, 0, :]
+        return out, aux

@@ -1,0 +1,183 @@
+"""Mamba-1 selective-SSM block (falcon-mamba; jamba's mamba layers).
+
+Tensor-parallel over ``d_inner`` ("tp" on the model axis): in/dt projections
+column-parallel, x/out projections row-parallel, the selective scan itself is
+fully local per d_inner shard (no comms inside the recurrence).
+
+Sequence handling:
+  * train/prefill: sequential ``lax.scan`` over chunks with an associative
+    scan inside each chunk -> O(chunk * d_inner * d_state) transient memory.
+  * decode: O(1)-state single-step recurrence (+ rolling conv window).
+The Pallas kernel (kernels/ssm_scan.py) is the TPU execution path for the
+within-chunk scan; this jnp path is the oracle and the dry-run/compile path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, ParamStore, Topo
+
+
+def ssm_chunk_scan(a: jax.Array, u: jax.Array, h0: jax.Array):
+    """Inclusive scan of h_t = a_t * h_{t-1} + u_t along axis 1.
+
+    a, u: (b, s, di, ds);  h0: (b, di, ds).  Returns (h_all, h_last).
+    """
+
+    def combine(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, a2 * u1 + u2
+
+    a_s, u_s = jax.lax.associative_scan(combine, (a, u), axis=1)
+    h = a_s * h0[:, None] + u_s
+    return h, h[:, -1]
+
+
+@dataclass(frozen=True)
+class MambaBlock:
+    name: str
+    d_model: int
+    d_inner: int
+    d_state: int
+    d_conv: int
+    dt_rank: int
+    layout: str = "megatron"       # megatron | decode_rp
+    chunk: int = 128
+    # "sequential": lax.scan over time inside each chunk — O(state) HBM
+    #   traffic per step (matches the Pallas kernel's dataflow; §Perf F1)
+    # "associative": log-depth associative scan — ~14 full-tensor passes of
+    #   (b, chunk, di, ds) per chunk (the measured 60x byte hog; kept as the
+    #   paper-faithful-baseline/ablation path)
+    scan_impl: str = "sequential"
+
+    @property
+    def _fsdp(self) -> str | None:
+        # decode keeps weights fully resident (tp-sharded only)
+        return None if self.layout == "decode_rp" else "fsdp"
+
+    def register(self, store: ParamStore) -> None:
+        d, di, ds, dr, K = self.d_model, self.d_inner, self.d_state, self.dt_rank, self.d_conv
+        n = self.name
+        store.add(f"{n}/w_in", ParamDef((d, 2 * di), (self._fsdp, "tp")))
+        store.add(f"{n}/conv_w", ParamDef((K, di), (None, "tp"), scale=0.5))
+        store.add(f"{n}/conv_b", ParamDef((di,), ("tp",), init="zeros"))
+        store.add(f"{n}/w_x", ParamDef((di, dr + 2 * ds), ("tp", None)))
+        store.add(f"{n}/w_dt", ParamDef((dr, di), (None, "tp")))
+        store.add(f"{n}/dt_bias", ParamDef((di,), ("tp",), init="mamba_dt"))
+        store.add(f"{n}/A_log", ParamDef((di, ds), ("tp", None), init="mamba_a"))
+        store.add(f"{n}/D", ParamDef((di,), ("tp",), init="ones"))
+        store.add(f"{n}/w_out", ParamDef((di, d), ("tp", self._fsdp)))
+
+    # ------------------------------------------------------------------
+    def _conv(self, p: dict, x: jax.Array) -> jax.Array:
+        """Causal depthwise conv along seq via K shifted adds. x: (b,s,di)."""
+        K = self.d_conv
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        s = x.shape[1]
+        out = p["conv_b"].astype(x.dtype)[None, None, :] * jnp.ones_like(x)
+        for k in range(K):
+            out = out + pad[:, k:k + s, :] * p["conv_w"][k][None, None, :]
+        return out
+
+    def _ssm_raw(self, p: dict, x: jax.Array, topo: Topo):
+        """x: (b,s,di) post-conv post-silu -> (dt (b,s,di) f32, B, C (b,s,ds))."""
+        xdb = jnp.einsum("bsi,ir->bsr", x, p["w_x"])
+        xdb = topo.shard(xdb, "batch", None, None)
+        dt_raw, B, C = jnp.split(xdb, [self.dt_rank, self.dt_rank + self.d_state], axis=-1)
+        dt = jnp.einsum("bsr,ri->bsi", dt_raw, p["w_dt"]) + p["dt_bias"]
+        dt = jax.nn.softplus(dt.astype(jnp.float32))
+        return dt, B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def _ssm_inputs(self, p: dict, x: jax.Array, topo: Topo):
+        """x: (b,s,di) post-conv post-silu -> (decay a, drive u, C, dt)."""
+        dt, B, C = self._ssm_raw(p, x, topo)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (di, ds)
+        a = jnp.exp(dt[..., None] * A)                        # (b,s,di,ds)
+        u = (dt * x.astype(jnp.float32))[..., None] * B[:, :, None, :]
+        return a, u, C, dt
+
+    # -- full-sequence forward (train / prefill) -------------------------
+    def __call__(self, p: dict, h: jax.Array, positions, topo: Topo,
+                 return_state: bool = False, **_):
+        b, s, d = h.shape
+        xz = jnp.einsum("bsd,de->bse", h, p["w_in"])
+        xz = topo.shard(xz, "batch", None, "tp")
+        x_pre, z = jnp.split(xz, 2, axis=-1)
+        x = self._conv(p, x_pre)
+        x = jax.nn.silu(x.astype(jnp.float32)).astype(h.dtype)
+
+        chunk = min(self.chunk, s)
+        nc = s // chunk
+        di = self.d_inner
+
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (di, ds)
+
+        def body(carry, x_c):
+            # x_c: (b, chunk, di).  SSM inputs are built per chunk so the
+            # (b, chunk, di, ds) tensors never materialize at full seq len.
+            h0 = carry
+            if self.scan_impl == "associative":
+                a_c, u_c, C_c, _ = self._ssm_inputs(p, x_c, topo)
+                hs, h_last = ssm_chunk_scan(a_c, u_c, h0)
+                y_c = jnp.einsum("bsin,bsn->bsi", hs, C_c)
+            else:
+                # sequential: the (di, ds) expansion happens per step, so
+                # only the (b, di, ds) state (+ per-token rows) touches HBM —
+                # the same dataflow as the Pallas ssm_scan kernel
+                dt_c, B_c, C_c = self._ssm_raw(p, x_c, topo)
+
+                def step(hh, xs):
+                    dt_t, x_t, b_t, c_t = xs                   # (b,di),(b,di),(b,ds)
+                    a_t = jnp.exp(dt_t[..., None] * A)         # (b,di,ds)
+                    u_t = (dt_t * x_t)[..., None] * b_t[:, None, :]
+                    hh = a_t * hh + u_t
+                    return hh, jnp.einsum("bin,bn->bi", hh, c_t)
+
+                xs = (dt_c.transpose(1, 0, 2),
+                      x_c.astype(jnp.float32).transpose(1, 0, 2),
+                      B_c.transpose(1, 0, 2), C_c.transpose(1, 0, 2))
+                h_last, ys = jax.lax.scan(step, h0, xs)
+                y_c = ys.transpose(1, 0, 2)
+            return h_last, y_c.astype(h.dtype)
+
+        # remat: recompute the (b, chunk, di, ds) scan intermediates in bwd
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x_r = x.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+        h0 = jnp.zeros((b, di, self.d_state), jnp.float32)
+        h_last, ys = jax.lax.scan(body, h0, x_r)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, di).astype(jnp.float32)
+        y = y + p["D"].astype(jnp.float32) * x.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+        y = topo.shard(y, "batch", None, "tp")
+        out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+        out = topo.shard(out, "batch", None, None)
+        if return_state:
+            # conv tail: last K-1 pre-conv inputs, for decode continuation
+            conv_tail = x_pre[:, s - (self.d_conv - 1):, :]
+            return out, (h_last, conv_tail)
+        return out
+
+    # -- single-token decode ---------------------------------------------
+    def decode(self, p: dict, h: jax.Array, t, state: jax.Array,
+               conv_state: jax.Array, topo: Topo):
+        """h: (b, d); state: (b, di, ds) f32; conv_state: (b, K-1, di)."""
+        b, d = h.shape
+        xz = jnp.einsum("bd,de->be", h, p["w_in"])
+        xz = topo.shard(xz, "batch", "tp")
+        x, z = jnp.split(xz, 2, axis=-1)                      # (b, di)
+        window = jnp.concatenate([conv_state, x[:, None, :]], axis=1)  # (b,K,di)
+        conv_state = window[:, 1:, :]
+        x = jnp.einsum("bki,ki->bi", window, p["conv_w"]) + p["conv_b"]
+        x = jax.nn.silu(x.astype(jnp.float32)).astype(h.dtype)
+        a, u, C, _ = self._ssm_inputs(p, x[:, None, :], topo)
+        state = a[:, 0] * state + u[:, 0]                     # (b, di, ds)
+        y = jnp.einsum("bin,bn->bi", state, C[:, 0])
+        y = y + p["D"].astype(jnp.float32) * x.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+        out = jnp.einsum("bi,id->bd", y, p["w_out"])
+        out = topo.shard(out, "batch", None)
+        return out, (state, conv_state)

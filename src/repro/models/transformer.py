@@ -1,0 +1,381 @@
+"""Decoder-only LM assembly for dense / moe / ssm / hybrid / vlm families.
+
+The layer stack is expressed as a repeating *period* (dense: 1 layer;
+llama-vision: 5 layers with a cross-attention block on the 5th; jamba: 8
+layers = 7 mamba + 1 attention with MoE on alternating layers) and scanned
+with ``lax.scan`` over stacked period parameters, so HLO size is O(period),
+not O(depth) — this keeps 512-device SPMD compiles fast.
+
+Entry points (selected by ``kind``):
+  * train   — ``loss(params, batch)``; loss is computed in seq chunks so the
+              fp32 logits for 256k vocabs never materialize at full length.
+  * prefill — ``prefill(params, batch)`` -> (last-token logits, caches)
+  * decode  — ``decode_step(params, caches, tokens, t)`` (single new token
+              against sequence-sharded caches)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import Attention, MLAttention
+from repro.models.common import (
+    ParamDef,
+    ParamStore,
+    Topo,
+    cross_entropy_loss,
+    maybe_remat,
+)
+from repro.models.layers import Embedding, Mlp, Norm, chunked_ce_loss
+from repro.models.moe import MoE
+from repro.models.ssm import MambaBlock
+
+
+@dataclass(frozen=True)
+class SubLayer:
+    name: str
+    kind: str                  # attn | cross | mla | mamba | mlp | moe
+    norm: Norm
+    block: Any
+    gated: bool = False        # tanh-gated residual (vlm cross-attn)
+
+    def register(self, store: ParamStore) -> None:
+        self.norm.register(store)
+        self.block.register(store)
+        if self.gated:
+            store.add(f"{self.name}/gate", ParamDef((1,), (None,), init="zeros"))
+
+
+def _attn_layout(cfg: ModelConfig, topo: Topo, kind: str) -> str:
+    if kind == "decode":
+        return "decode_rp"
+    tp = topo.axis_size("tp")
+    if cfg.num_heads and cfg.num_heads % max(tp, 1) == 0:
+        return "megatron"
+    return "fsdp_sp"
+
+
+def _moe_placement(cfg: ModelConfig, topo: Topo, kind: str) -> str:
+    tp = topo.axis_size("tp")
+    ep_ok = cfg.moe_num_experts % max(tp, 1) == 0
+    if kind == "decode":
+        return "ep_decode" if ep_ok else "tp_decode"
+    return "ep" if ep_ok else "gathered"
+
+
+def build_period(cfg: ModelConfig, topo: Topo, kind: str) -> tuple[list[SubLayer], int]:
+    """Sublayers of one period + number of periods."""
+    layout = _attn_layout(cfg, topo, kind)
+    moe_place = _moe_placement(cfg, topo, kind)
+    if cfg.family == "hybrid":
+        period_len = cfg.attn_period
+    elif cfg.family == "vlm":
+        period_len = cfg.cross_attn_period
+    elif cfg.layers_per_period and cfg.num_layers % cfg.layers_per_period == 0:
+        period_len = cfg.layers_per_period
+    else:
+        period_len = 1
+    subs: list[SubLayer] = []
+    zero3 = kind != "decode"
+
+    def norm(n: str) -> Norm:
+        return Norm(f"{n}/norm", cfg.d_model, cfg.norm_type, cfg.norm_eps)
+
+    for j in range(period_len):
+        # ---- mixer ----
+        if cfg.family == "ssm" or (cfg.family == "hybrid" and not cfg.is_attn_layer(j)):
+            n = f"l{j}_mamba"
+            subs.append(SubLayer(n, "mamba", norm(n), MambaBlock(
+                f"{n}/core", cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                cfg.ssm_conv, cfg.dt_rank,
+                layout=layout if kind == "decode" else "megatron",
+                scan_impl=cfg.ssm_scan_impl)))
+        elif cfg.use_mla:
+            n = f"l{j}_mla"
+            subs.append(SubLayer(n, "mla", norm(n), MLAttention(
+                f"{n}/core", cfg.d_model, cfg.num_heads, cfg.kv_lora_rank,
+                cfg.mla_qk_nope, cfg.qk_rope_dim, cfg.mla_v_dim,
+                layout="decode_rp" if kind == "decode" else "megatron",
+                rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)))
+        else:
+            n = f"l{j}_attn"
+            subs.append(SubLayer(n, "attn", norm(n), Attention(
+                f"{n}/core", cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, layout=layout, rope_theta=cfg.rope_theta,
+                use_rope=cfg.rope_theta > 0, qkv_bias=cfg.qkv_bias,
+                out_bias=cfg.attn_out_bias)))
+        # ---- vlm cross-attention on the last layer of each period ----
+        if cfg.family == "vlm" and j == period_len - 1:
+            n = f"l{j}_cross"
+            subs.append(SubLayer(n, "cross", norm(n), Attention(
+                f"{n}/core", cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, layout=layout, use_rope=False,
+                is_cross=True, causal=False), gated=True))
+        # ---- ffn ----
+        if cfg.is_moe_layer(j):
+            n = f"l{j}_moe"
+            subs.append(SubLayer(n, "moe", norm(n), MoE(
+                f"{n}/core", cfg.d_model, cfg.moe_num_experts, cfg.moe_top_k,
+                cfg.moe_d_ff, num_shared=cfg.moe_num_shared,
+                group_size=cfg.moe_group_size, capacity_factor=cfg.capacity_factor,
+                placement=moe_place)))
+        elif cfg.d_ff:
+            n = f"l{j}_mlp"
+            subs.append(SubLayer(n, "mlp", norm(n), Mlp(
+                f"{n}/core", cfg.d_model, cfg.d_ff, cfg.mlp_activation,
+                mode="gathered" if layout == "fsdp_sp" else "tp", zero3=zero3)))
+    n_periods = cfg.num_layers // period_len
+    return subs, n_periods
+
+
+class LM:
+    """Decoder-only language model over a repeating period stack."""
+
+    def __init__(self, cfg: ModelConfig, topo: Topo, kind: str = "train"):
+        assert kind in ("train", "prefill", "decode")
+        self.cfg, self.topo, self.kind = cfg, topo, kind
+        self.layout = _attn_layout(cfg, topo, kind)
+        self.seq_sharded = self.layout == "fsdp_sp"
+        self.period, self.n_periods = build_period(cfg, topo, kind)
+
+        self.embedding = Embedding("embed", cfg.padded_vocab, cfg.d_model,
+                                   tie=cfg.tie_embeddings,
+                                   seq_sharded=self.seq_sharded)
+        self.final_norm = Norm("final_norm", cfg.d_model, cfg.norm_type, cfg.norm_eps)
+        store = ParamStore()
+        self.embedding.register(store)
+        self.final_norm.register(store)
+        pstore = ParamStore()
+        for sub in self.period:
+            sub.register(pstore)
+        store.stacked(self.n_periods, "layers", pstore)
+        self.store = store
+        self._pstore = pstore
+        # per-period specs, re-applied inside the scan body: the transpose of
+        # with_sharding_constraint constrains weight *cotangents* too, forcing
+        # per-iteration reduce-scatter of ZeRO-sharded grads (without this the
+        # stacked grad buffers materialize gathered: ~16x memory)
+        self._period_pspecs = pstore.pspecs(topo)
+
+    # ------------------------------------------------------------------
+    def init_params(self, key: jax.Array) -> dict:
+        return self.store.init(key)
+
+    def param_shapes(self) -> dict:
+        return self.store.shape_structs()
+
+    def param_specs(self) -> dict:
+        return self.store.pspecs(self.topo)
+
+    # ------------------------------------------------------------------
+    def _seq_axis(self):
+        return "seq_tp" if self.seq_sharded else None
+
+    def _memory(self, batch: dict) -> jax.Array | None:
+        return batch.get("image_embeds")
+
+    def _apply_period(self, p: dict, h, positions, memory, collect: bool):
+        aux = jnp.zeros((), jnp.float32)
+        kvs: dict[str, Any] = {}
+        topo = self.topo
+        for sub in self.period:
+            sp = p[sub.name]
+            # (§Perf C2, refuted & reverted: pre-gathering the bf16 residual
+            # before the f32-internal norm did NOT shrink collectives — the
+            # f32 comms are backward-pass cotangents — and cost +65% memory
+            # from the extra materialized gather.)
+            x = sub.norm(sp["norm"], h)
+            if sub.kind in ("attn", "mla"):
+                if collect:
+                    out, kv = sub.block(sp["core"], x, positions, topo, return_kv=True)
+                    if sub.kind == "mla":
+                        kvs[sub.name] = {"ckv": kv[0], "krope": kv[1]}
+                    else:
+                        kvs[sub.name] = {"k": kv[0], "v": kv[1]}
+                else:
+                    out = sub.block(sp["core"], x, positions, topo)
+            elif sub.kind == "cross":
+                mem_pos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+                if collect:
+                    out, kv = sub.block(sp["core"], x, positions, topo,
+                                        memory=memory, memory_positions=mem_pos,
+                                        return_kv=True)
+                    kvs[sub.name] = {"k": kv[0], "v": kv[1]}
+                else:
+                    out = sub.block(sp["core"], x, positions, topo,
+                                    memory=memory, memory_positions=mem_pos)
+            elif sub.kind == "mamba":
+                if collect:
+                    out, (state, conv) = sub.block(sp["core"], x, positions, topo,
+                                                   return_state=True)
+                    kvs[sub.name] = {"state": state, "conv": conv}
+                else:
+                    out = sub.block(sp["core"], x, positions, topo)
+            elif sub.kind == "moe":
+                out, aux_i = sub.block(sp["core"], x, topo)
+                aux = aux + aux_i
+            else:  # mlp
+                out = sub.block(sp["core"], x, topo)
+            if sub.gated:
+                out = jnp.tanh(sp["gate"].astype(jnp.float32)).astype(out.dtype) * out
+            h = h + out
+        # Megatron-SP-style boundary: the residual stream is sequence-sharded
+        # over "model" between periods, so remat checkpoints 1/tp of it; XLA
+        # inserts the AG/RS pair inside the (rematerialized) layer body.
+        h = self.topo.shard(h, "batch", "seq_tp", None)
+        return h, aux, kvs
+
+    def _stack(self, params, h, positions, memory, collect: bool):
+        def body(carry, layer_params):
+            h, aux = carry
+            if self.topo.active:
+                layer_params = jax.tree.map(
+                    jax.lax.with_sharding_constraint, layer_params,
+                    self._period_pspecs)
+            h, aux_i, kvs = self._apply_period(layer_params, h, positions,
+                                               memory, collect)
+            return (h, aux + aux_i), kvs
+
+        body = maybe_remat(body, self.cfg.remat and self.kind == "train")
+        (h, aux), kvs = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                     params["layers"])
+        return h, aux, kvs
+
+    # ------------------------------------------------------------------
+    def loss(self, params: dict, batch: dict):
+        cfg, topo = self.cfg, self.topo
+        tokens, labels = batch["tokens"], batch["labels"]
+        b, s = tokens.shape
+        h = self.embedding.embed(params["embed"], tokens, topo)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        h, aux, _ = self._stack(params, h, positions, self._memory(batch), False)
+        h = self.final_norm(params["final_norm"], h)
+        loss = chunked_ce_loss(self.embedding, params["embed"], h, labels,
+                               cfg.vocab_size, topo)
+        total = loss + 0.01 * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    # ------------------------------------------------------------------
+    def prefill(self, params: dict, batch: dict):
+        cfg, topo = self.cfg, self.topo
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = self.embedding.embed(params["embed"], tokens, topo)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        h, _, kvs = self._stack(params, h, positions, self._memory(batch), True)
+        h = self.final_norm(params["final_norm"], h)
+        last = topo.shard(h[:, -1], "batch", None)
+        logits = self.embedding.logits(params["embed"], last, topo)
+        caches = self._shard_caches(kvs)
+        return logits, caches
+
+    def _shard_caches(self, kvs):
+        out = {}
+        for name, entry in kvs.items():
+            se = {}
+            for kname, v in entry.items():
+                if kname in ("k", "v"):
+                    se[kname] = self.topo.shard(v, None, "batch", "seq_tp", None, None)
+                elif kname == "ckv" or kname == "krope":
+                    se[kname] = self.topo.shard(v, None, "batch", "seq_tp", None)
+                elif kname == "state":
+                    se[kname] = self.topo.shard(v, None, "batch", "tp", None)
+                else:  # conv tail
+                    se[kname] = self.topo.shard(v, None, "batch", None, "tp")
+            out[name] = se
+        return out
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params: dict, caches: dict, tokens: jax.Array,
+                    t: jax.Array):
+        """tokens: (b,) int32; t: scalar int32 position. Returns (logits, caches)."""
+        cfg, topo = self.cfg, self.topo
+        h = self.embedding.embed(params["embed"], tokens, topo)   # (b, d)
+
+        def body(h, xs):
+            lp, lc = xs
+            new_c = {}
+            for sub in self.period:
+                sp = lp[sub.name]
+                x = sub.norm(sp["norm"], h)
+                if sub.kind == "attn":
+                    out, (k_c, v_c) = sub.block.decode(
+                        sp["core"], x, t, lc[sub.name]["k"], lc[sub.name]["v"], topo)
+                    new_c[sub.name] = {"k": k_c, "v": v_c}
+                elif sub.kind == "cross":
+                    out, _ = sub.block.decode(
+                        sp["core"], x, t, lc[sub.name]["k"], lc[sub.name]["v"], topo,
+                        update_cache=False)
+                    new_c[sub.name] = lc[sub.name]
+                elif sub.kind == "mla":
+                    out, (c_c, r_c) = sub.block.decode(
+                        sp["core"], x, t, lc[sub.name]["ckv"], lc[sub.name]["krope"], topo)
+                    new_c[sub.name] = {"ckv": c_c, "krope": r_c}
+                elif sub.kind == "mamba":
+                    out, (state, conv) = sub.block.decode(
+                        sp["core"], x, t, lc[sub.name]["state"], lc[sub.name]["conv"], topo)
+                    new_c[sub.name] = {"state": state, "conv": conv}
+                elif sub.kind == "moe":
+                    out, _ = sub.block(sp["core"], x, topo)
+                else:
+                    out = sub.block(sp["core"], x, topo)
+                if sub.gated:
+                    out = jnp.tanh(sp["gate"].astype(jnp.float32)).astype(out.dtype) * out
+                h = h + out
+            return h, new_c
+
+        h, new_caches = jax.lax.scan(body, h, (params["layers"], caches))
+        h = self.final_norm(params["final_norm"], h)
+        logits = self.embedding.logits(params["embed"], h, topo)
+        return logits, new_caches
+
+    # ------------------------------------------------------------------
+    def cache_shape_structs(self, batch: int, seq: int) -> dict:
+        """ShapeDtypeStructs for decode caches (stacked over periods)."""
+        cfg = self.cfg
+        n = self.n_periods
+        out = {}
+        for sub in self.period:
+            if sub.kind == "attn":
+                kvd = (n, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+                out[sub.name] = {
+                    "k": jax.ShapeDtypeStruct(kvd, jnp.bfloat16),
+                    "v": jax.ShapeDtypeStruct(kvd, jnp.bfloat16)}
+            elif sub.kind == "cross":
+                kvd = (n, batch, cfg.num_image_tokens, cfg.num_kv_heads, cfg.head_dim)
+                out[sub.name] = {
+                    "k": jax.ShapeDtypeStruct(kvd, jnp.bfloat16),
+                    "v": jax.ShapeDtypeStruct(kvd, jnp.bfloat16)}
+            elif sub.kind == "mla":
+                out[sub.name] = {
+                    "ckv": jax.ShapeDtypeStruct((n, batch, seq, cfg.kv_lora_rank), jnp.bfloat16),
+                    "krope": jax.ShapeDtypeStruct((n, batch, seq, cfg.qk_rope_dim), jnp.bfloat16)}
+            elif sub.kind == "mamba":
+                out[sub.name] = {
+                    "state": jax.ShapeDtypeStruct((n, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                    "conv": jax.ShapeDtypeStruct((n, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.bfloat16)}
+        return out
+
+    def cache_pspecs(self, batch: int, seq: int) -> dict:
+        """PartitionSpecs congruent with cache_shape_structs(batch, seq)."""
+        topo = self.topo
+        structs = self.cache_shape_structs(batch, seq)
+        axes_by_key = {
+            "k": (None, "batch", "seq_tp", None, None),
+            "v": (None, "batch", "seq_tp", None, None),
+            "ckv": (None, "batch", "seq_tp", None),
+            "krope": (None, "batch", "seq_tp", None),
+            "state": (None, "batch", "tp", None),
+            "conv": (None, "batch", None, "tp"),
+        }
+        out = {}
+        for name, entry in structs.items():
+            out[name] = {
+                key: topo.pspec(axes_by_key[key], st.shape)
+                for key, st in entry.items()
+            }
+        return out

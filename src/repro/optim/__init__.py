@@ -1,0 +1,3 @@
+from repro.optim.adamw import (adamw_update, clip_by_global_norm, global_norm,
+                               init_opt_state, opt_state_shapes)
+from repro.optim.schedule import warmup_cosine

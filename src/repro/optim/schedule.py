@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+def warmup_cosine(cfg: RunConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.learning_rate * jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.learning_rate * (0.1 + 0.9 * cos)
+    return jnp.where(step < cfg.warmup_steps, warm, decayed)

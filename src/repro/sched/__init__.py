@@ -1,0 +1,2 @@
+from repro.sched.dvfs import FrequencyActuator, SimActuator
+from repro.sched.power_sched import JobPlan, PowerAwareScheduler, ScheduleResult

@@ -1,0 +1,75 @@
+"""Power-aware cluster scheduling on top of Minos predictions (paper §4.3:
+POLCA/TAPAS/PAL-style use cases).
+
+Given a pod power budget and a queue of jobs (each a WorkloadProfile from a
+single low-cost profiling run), the scheduler:
+  1. runs Algorithm 1 per job to pick a frequency cap for the objective,
+  2. estimates each job's p90 chip power at that cap from its *neighbor's*
+     scaling data (no extra profiling),
+  3. packs jobs into the budget (first-fit decreasing), oversubscribing
+     against nameplate TDP — the paper's motivating scenario.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.algorithm1 import FreqSelection, select_optimal_freq
+from repro.core.classify import MinosClassifier, WorkloadProfile
+
+
+@dataclass
+class JobPlan:
+    name: str
+    chips: int
+    cap: float
+    predicted_p90_w: float
+    selection: FreqSelection
+
+
+@dataclass
+class ScheduleResult:
+    placed: list[JobPlan] = field(default_factory=list)
+    deferred: list[str] = field(default_factory=list)
+    budget_w: float = 0.0
+
+    @property
+    def planned_power_w(self) -> float:
+        return sum(j.predicted_p90_w * j.chips for j in self.placed)
+
+    @property
+    def nameplate_power_w(self) -> float:
+        # what a TDP-provisioned (non-Minos) scheduler would have to assume
+        return sum(j.chips for j in self.placed)
+
+
+class PowerAwareScheduler:
+    def __init__(self, clf: MinosClassifier, tdp_w: float,
+                 objective: str = "powercentric"):
+        self.clf = clf
+        self.tdp_w = tdp_w
+        self.objective = objective
+
+    def plan_job(self, profile: WorkloadProfile, chips: int) -> JobPlan:
+        sel = select_optimal_freq(profile, self.clf)
+        cap = sel.cap(self.objective)
+        neighbor = next(r for r in self.clf.references
+                        if r.name == sel.power_neighbor)
+        # nearest available frequency in the neighbor's scaling data
+        f = min(neighbor.scaling, key=lambda x: abs(x - cap))
+        p90_rel = neighbor.scaling[f].p90
+        return JobPlan(profile.name, chips, cap, p90_rel * self.tdp_w, sel)
+
+    def schedule(self, jobs: list[tuple[WorkloadProfile, int]],
+                 budget_w: float) -> ScheduleResult:
+        plans = sorted((self.plan_job(p, c) for p, c in jobs),
+                       key=lambda j: -j.predicted_p90_w * j.chips)
+        res = ScheduleResult(budget_w=budget_w)
+        used = 0.0
+        for plan in plans:
+            need = plan.predicted_p90_w * plan.chips
+            if used + need <= budget_w:
+                res.placed.append(plan)
+                used += need
+            else:
+                res.deferred.append(plan.name)
+        return res

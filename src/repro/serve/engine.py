@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill once, decode tokens step by step.
+
+The engine owns two model instances sharing parameter values: a ``prefill``
+model (megatron/fsdp_sp layouts) and a ``decode`` model (row-parallel layouts
+with sequence-sharded caches).  On hardware the weights would be laid out
+twice (or re-materialized); on the CPU test path the shardings are inactive
+and values are shared.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Topo
+from repro.models.model_zoo import build_model
+
+
+@dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, topo: Topo, max_len: int):
+        self.cfg, self.topo, self.max_len = cfg, topo, max_len
+        self.prefill_model = build_model(cfg, topo, kind="prefill")
+        self.decode_model = build_model(cfg, topo, kind="decode")
+        self._prefill = jax.jit(self.prefill_model.prefill)
+        self._decode = jax.jit(self.decode_model.decode_step)
+        self.stats = ServeStats()
+
+    def init_params(self, key: jax.Array):
+        return self.prefill_model.init_params(key)
+
+    def _pad_caches(self, caches, batch: int, prompt_len: int,
+                    memory_len: int | None = None):
+        if self.cfg.is_encoder_decoder:
+            structs = self.decode_model.cache_shape_structs(
+                batch, self.max_len, memory_len=memory_len)
+        else:
+            structs = self.decode_model.cache_shape_structs(batch, self.max_len)
+
+        def pad(c, st):
+            pads = [(0, a - b) for a, b in zip(st.shape, c.shape)]
+            return jnp.pad(c.astype(st.dtype), pads)
+
+        return jax.tree.map(pad, caches, structs)
+
+    def generate(self, params, batch: dict, num_tokens: int,
+                 greedy: bool = True, key: jax.Array | None = None) -> np.ndarray:
+        """batch: prefill inputs {"tokens": (b, s), ...} -> (b, num_tokens)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        if s + num_tokens > self.max_len:
+            raise ValueError("prompt + generation exceeds engine max_len")
+        logits, caches = self._prefill(params, batch)
+        mem_len = batch["frames"].shape[1] if "frames" in batch else None
+        caches = self._pad_caches(caches, b, s, memory_len=mem_len)
+        self.stats.prefill_tokens += b * s
+        out = []
+        for i in range(num_tokens):
+            logits = jnp.asarray(logits, jnp.float32)[:, :self.cfg.vocab_size]
+            if greedy or key is None:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits).astype(jnp.int32)
+            out.append(np.asarray(nxt))
+            t = jnp.asarray(s + i, jnp.int32)
+            logits, caches = self._decode(params, caches, nxt, t)
+            self.stats.decode_steps += 1
+        return np.stack(out, axis=1)

@@ -1,0 +1,5 @@
+from repro.telemetry.kernel_stream import Kernel, KernelStream, build_stream
+from repro.telemetry.power_model import TPUPowerModel
+from repro.telemetry.simulator import SimTrace, profile_once, profile_workload, simulate
+from repro.telemetry.workloads import (build_holdout_profiles, build_reference_set,
+                                       holdout_streams, reference_streams)

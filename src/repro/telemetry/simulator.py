@@ -1,0 +1,179 @@
+"""Event-based telemetry simulator: kernel stream -> sampled power trace.
+
+Produces exactly what the paper's profiling harness sees on hardware:
+  * an energy-accumulator counter sampled every 1-2 ms (noisy, per [87])
+  * a busy-cycles counter (for idle trimming)
+  * per-kernel (duration, compute-util, memory-util) rows (the nsight
+    analogue) — aggregated into the app-level utilization point.
+
+Integration is vectorized: power is piecewise-constant over events, so the
+cumulative energy E(t) is piecewise-linear and sampling it at bin edges is a
+single ``np.interp``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.classify import FreqPoint, WorkloadProfile
+from repro.core import spikes as spk
+from repro.telemetry.kernel_stream import KernelStream
+from repro.telemetry.power_model import (
+    OVERSHOOT_TAU, TPUPowerModel,
+)
+
+
+@dataclass
+class SimTrace:
+    power_filtered: np.ndarray       # after Δe/Δt + EMA + trim (what Minos sees)
+    power_raw: np.ndarray
+    busy: np.ndarray
+    sample_dt: float
+    exec_time: float                 # one iteration of the stream (s)
+    app_sm_util: float
+    app_dram_util: float
+    kernel_rows: list = field(default_factory=list)
+
+
+def simulate(stream: KernelStream, freq: float, model: TPUPowerModel,
+             sample_dt: float = 1e-3, target_duration: float = 4.0,
+             max_iterations: int = 2000, noise: float = 0.03,
+             seed: int = 0) -> SimTrace:
+    execs = [model.exec_kernel(k, freq) for k in stream.kernels]
+    gaps = np.array([k.gap_s for k in stream.kernels])
+    durs = np.array([e.duration for e in execs])
+    pows = np.array([e.power for e in execs])
+    step_time = float(np.sum(gaps) + np.sum(durs))
+    iters = int(np.clip(np.ceil(target_duration / max(step_time, 1e-9)),
+                        1, max_iterations))
+
+    # --- build the event list (times, power levels) for all iterations ---
+    nk = len(execs)
+    idle = model.idle_w
+    # per-iteration event pattern: [gap_0, k_0, gap_1, k_1, ...]
+    seg_d = np.empty(2 * nk)
+    seg_p = np.empty(2 * nk)
+    seg_busy = np.empty(2 * nk)
+    seg_d[0::2] = gaps
+    seg_d[1::2] = durs
+    seg_p[0::2] = idle
+    seg_p[1::2] = pows
+    seg_busy[0::2] = 0.0
+    seg_busy[1::2] = 1.0
+    # head/tail idle padding so trimming has something to trim
+    pad = max(10 * sample_dt, 0.01)
+    d = np.concatenate([[pad], np.tile(seg_d, iters), [pad]])
+    p = np.concatenate([[idle], np.tile(seg_p, iters), [idle]])
+    busy_flag = np.concatenate([[0.0], np.tile(seg_busy, iters), [0.0]])
+    # drop zero-length segments
+    keep = d > 0
+    d, p, busy_flag = d[keep], p[keep], busy_flag[keep]
+
+    # --- overshoot events at low->high transitions ---
+    t_edges = np.concatenate([[0.0], np.cumsum(d)])
+    starts, ends = t_edges[:-1], t_edges[1:]
+    ev_t0, ev_t1, ev_p, ev_busy = [starts], [ends], [p], [busy_flag]
+    prev_p = np.concatenate([[idle], p[:-1]])
+    for i in np.nonzero(p - prev_p >= 30.0)[0]:
+        amp = model.overshoot(prev_p[i], p[i])
+        if amp is None:
+            continue
+        tau = min(OVERSHOOT_TAU, d[i])
+        ev_t0.append(np.array([starts[i]]))
+        ev_t1.append(np.array([starts[i] + tau]))
+        # overshoot is *additional* power on top of the segment
+        ev_p.append(np.array([amp - p[i]]))
+        ev_busy.append(np.array([0.0]))
+    t0 = np.concatenate(ev_t0)
+    t1 = np.concatenate(ev_t1)
+    pw = np.concatenate(ev_p)
+
+    total_t = t_edges[-1]
+    n_samples = int(total_t / sample_dt)
+    edges = np.arange(n_samples + 1) * sample_dt
+
+    # cumulative energy at arbitrary t: sum over events of overlap * power
+    # (piecewise-linear; evaluate by interp of each event's contribution)
+    energy = np.zeros(n_samples + 1)
+    # E_event(t) = p * clip(t - t0, 0, t1 - t0)
+    for a, b, watts in _chunks(t0, t1, pw):
+        contrib = np.clip(edges[None, :] - a[:, None], 0.0,
+                          (b - a)[:, None]) * watts[:, None]
+        energy += contrib.sum(axis=0)
+
+    rng = np.random.default_rng(seed)
+    de = np.diff(energy)
+    de = de * (1.0 + noise * rng.standard_normal(n_samples))
+    # occasional sensor outliers (paper [87]: energy-derived power is spiky)
+    out_mask = rng.random(n_samples) < 0.01
+    de = np.where(out_mask, de * (1.0 + 0.5 * rng.random(n_samples)), de)
+    p_raw = de / sample_dt
+
+    # busy counter per sample
+    busy_t0, busy_t1 = starts[busy_flag > 0], ends[busy_flag > 0]
+    busy = np.zeros(n_samples)
+    for a, b, _ in _chunks(busy_t0, busy_t1, np.ones_like(busy_t0)):
+        contrib = np.clip(edges[None, :] - a[:, None], 0.0, (b - a)[:, None])
+        busy += np.diff(contrib.sum(axis=0))
+    busy = (busy > 0).astype(np.float64)
+
+    filt = spk.ema_filter(p_raw, alpha=0.5)
+    filt = spk.trim_idle(filt, busy)
+
+    tot_d = durs.sum()
+    app_sm = float((durs * [e.util_c for e in execs]).sum() / max(tot_d, 1e-12))
+    app_dr = float((durs * [e.util_m for e in execs]).sum() / max(tot_d, 1e-12))
+    rows = [(e.duration, e.util_c, e.util_m) for e in execs]
+    return SimTrace(power_filtered=filt, power_raw=p_raw, busy=busy,
+                    sample_dt=sample_dt, exec_time=step_time,
+                    app_sm_util=app_sm, app_dram_util=app_dr,
+                    kernel_rows=rows)
+
+
+def _chunks(t0, t1, pw, size: int = 512):
+    for i in range(0, len(t0), size):
+        yield t0[i:i + size], t1[i:i + size], pw[i:i + size]
+
+
+def profile_workload(stream: KernelStream, model: TPUPowerModel,
+                     freqs, tdp: float, seed: int = 0,
+                     sample_dt: float = 1e-3,
+                     target_duration: float = 4.0) -> WorkloadProfile:
+    """Full reference profile: trace at f_max + scaling points at all freqs."""
+    scaling = {}
+    top = max(freqs)
+    top_trace = None
+    for i, f in enumerate(sorted(freqs)):
+        tr = simulate(stream, f, model, seed=seed * 1009 + i,
+                      sample_dt=sample_dt, target_duration=target_duration)
+        pq = lambda q: spk.p_quantile(tr.power_filtered, tdp, q)
+        scaling[f] = FreqPoint(
+            freq=f, p90=pq(90), p95=pq(95), p99=pq(99),
+            mean_power=spk.mean_power_rel(tr.power_filtered, tdp),
+            exec_time=tr.exec_time,
+            spike_vec=spk.spike_vector(tr.power_filtered, tdp),
+        )
+        if f == top:
+            top_trace = tr
+    return WorkloadProfile(
+        name=stream.name,
+        tdp=tdp,
+        power_trace=top_trace.power_filtered,
+        sm_util=top_trace.app_sm_util,
+        dram_util=top_trace.app_dram_util,
+        exec_time=top_trace.exec_time,
+        scaling=scaling,
+        domain=stream.domain,
+    )
+
+
+def profile_once(stream: KernelStream, model: TPUPowerModel, tdp: float,
+                 freq: float = 1.0, seed: int = 0) -> WorkloadProfile:
+    """The low-cost single-frequency profile Minos uses for NEW workloads."""
+    tr = simulate(stream, freq, model, seed=seed)
+    return WorkloadProfile(
+        name=stream.name, tdp=tdp, power_trace=tr.power_filtered,
+        sm_util=tr.app_sm_util, dram_util=tr.app_dram_util,
+        exec_time=tr.exec_time, scaling={}, domain=stream.domain,
+    )

@@ -1,0 +1,89 @@
+"""The reference workload zoo (paper Table 1 analogue).
+
+Reference set: arch x shape cells from the assigned pool + HPC/graph
+microbenchmarks — spanning compute-bound, memory-bound, hybrid, and
+bursty-idle behavior, mirroring the paper's 18-workload diversity.
+
+Held-out (never in the reference set; used for the §7.1 case study):
+  * ``vector-search``  — FAISS analogue
+  * ``granite-moe``    — Qwen1.5-MoE analogue (an unseen MoE architecture)
+"""
+from __future__ import annotations
+
+from repro.analysis.hardware import FREQ_SWEEP, V5E
+from repro.configs import ARCHS, SHAPES
+from repro.telemetry import kernel_stream as kstream
+from repro.telemetry.power_model import TPUPowerModel
+from repro.telemetry.simulator import profile_once, profile_workload
+
+HOLDOUT_PREFIX = ("vector-search", "granite-moe-3b-a800m")
+
+# arch x shape cells in the zoo (kept to a representative-but-diverse set;
+# granite cells are excluded from references as the held-out MoE)
+_REFERENCE_CELLS = [
+    ("falcon-mamba-7b", "train_4k"), ("falcon-mamba-7b", "decode_32k"),
+    ("falcon-mamba-7b", "long_500k"),
+    ("glm4-9b", "train_4k"), ("glm4-9b", "decode_32k"),
+    ("glm4-9b", "prefill_32k"),
+    ("command-r-35b", "train_4k"), ("command-r-35b", "decode_32k"),
+    ("command-r-35b", "prefill_32k"),
+    ("phi3-medium-14b", "train_4k"), ("phi3-medium-14b", "decode_32k"),
+    ("qwen2.5-14b", "train_4k"), ("qwen2.5-14b", "decode_32k"),
+    ("llama-3.2-vision-11b", "train_4k"), ("llama-3.2-vision-11b", "decode_32k"),
+    ("jamba-1.5-large-398b", "train_4k"), ("jamba-1.5-large-398b", "decode_32k"),
+    ("jamba-1.5-large-398b", "long_500k"),
+    ("deepseek-v2-236b", "train_4k"), ("deepseek-v2-236b", "decode_32k"),
+    ("deepseek-v2-236b", "prefill_32k"),
+    ("whisper-medium", "train_4k"), ("whisper-medium", "decode_32k"),
+]
+
+_HOLDOUT_CELLS = [
+    ("granite-moe-3b-a800m", "decode_32k"),
+    ("granite-moe-3b-a800m", "train_4k"),
+]
+
+
+def reference_streams(n_chips: int = 256) -> list[kstream.KernelStream]:
+    out = []
+    for arch, shape in _REFERENCE_CELLS:
+        out.append(kstream.build_stream(ARCHS[arch], SHAPES[shape], n_chips))
+    out += [
+        kstream.micro_gemm(),
+        kstream.micro_spmv_memory(),
+        kstream.micro_spmv_compute(),
+        kstream.micro_idle_burst(),
+        kstream.micro_stencil(),
+    ]
+    return out
+
+
+def holdout_streams(n_chips: int = 256) -> list[kstream.KernelStream]:
+    out = [kstream.build_stream(ARCHS[a], SHAPES[s], n_chips)
+           for a, s in _HOLDOUT_CELLS]
+    out.append(kstream.micro_vector_search())
+    return out
+
+
+def build_reference_set(model: TPUPowerModel | None = None,
+                        freqs=FREQ_SWEEP, seed: int = 0,
+                        target_duration: float = 4.0):
+    """Profiles with full frequency sweeps (the shipped reference library)."""
+    model = model or TPUPowerModel()
+    tdp = model.spec.tdp_w
+    return [profile_workload(s, model, freqs, tdp, seed=seed + i,
+                             target_duration=target_duration)
+            for i, s in enumerate(reference_streams())]
+
+
+def build_holdout_profiles(model: TPUPowerModel | None = None, seed: int = 77,
+                           with_truth: bool = False, freqs=FREQ_SWEEP):
+    """Held-out workloads: single uncapped profile (what Minos sees) plus —
+    separately — the ground-truth sweep used only for evaluating predictions."""
+    model = model or TPUPowerModel()
+    tdp = model.spec.tdp_w
+    observed, truth = [], []
+    for i, s in enumerate(holdout_streams()):
+        observed.append(profile_once(s, model, tdp, seed=seed + i))
+        if with_truth:
+            truth.append(profile_workload(s, model, freqs, tdp, seed=seed + i))
+    return (observed, truth) if with_truth else observed

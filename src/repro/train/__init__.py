@@ -1,0 +1,2 @@
+from repro.train.loop import Trainer, TrainResult
+from repro.train.step import init_state, make_train_step, state_pspecs, state_shapes

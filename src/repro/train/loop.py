@@ -1,0 +1,91 @@
+"""Training loop: checkpoint/restart, preemption, stragglers, telemetry.
+
+The loop is deliberately host-driven and step-indexed: the data pipeline is
+addressed by step number (no hidden iterator state), so crash/preempt restart
+resumes bit-exact from the last committed checkpoint.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.data.synthetic import SyntheticTokens
+from repro.ft.heartbeat import PreemptionHandler, StragglerMonitor
+from repro.models.common import Topo
+from repro.models.model_zoo import build_model
+from repro.train.step import init_state, make_train_step
+
+
+@dataclass
+class TrainResult:
+    steps_run: int
+    final_step: int
+    losses: list = field(default_factory=list)
+    preempted: bool = False
+    restored_from: int | None = None
+    step_durations: list = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, run_cfg: RunConfig,
+                 topo: Topo, data=None,
+                 telemetry_hook: Callable[[int, float, dict], None] | None = None,
+                 preemption: PreemptionHandler | None = None):
+        self.cfg, self.shape, self.run_cfg, self.topo = cfg, shape, run_cfg, topo
+        self.model = build_model(cfg, topo, kind="train")
+        self.step_fn = jax.jit(make_train_step(self.model, run_cfg, topo),
+                               donate_argnums=(0,))
+        self.data = data or SyntheticTokens(cfg, shape, seed=run_cfg.seed)
+        self.telemetry_hook = telemetry_hook
+        self.preemption = preemption or PreemptionHandler(install=False)
+        self.straggler_monitor = StragglerMonitor()
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self, key: jax.Array) -> tuple[dict, int, int | None]:
+        directory = self.run_cfg.checkpoint_dir
+        last = ckpt.latest_step(directory)
+        if last is not None:
+            state, step = ckpt.restore(directory, last)
+            return state, step, last
+        return init_state(self.model, self.run_cfg, key), 0, None
+
+    def run(self, num_steps: int | None = None, key: jax.Array | None = None
+            ) -> TrainResult:
+        key = key if key is not None else jax.random.key(self.run_cfg.seed)
+        state, start_step, restored = self.init_or_restore(key)
+        total = num_steps if num_steps is not None else self.run_cfg.total_steps
+        result = TrainResult(steps_run=0, final_step=start_step,
+                             restored_from=restored)
+        step = start_step
+        while step < total:
+            batch = jax.tree.map(
+                lambda a: jax.numpy.asarray(a), self.data.batch_at(step))
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            step += 1
+            result.steps_run += 1
+            result.losses.append(loss)
+            result.step_durations.append(dt)
+            self.straggler_monitor.record(0, step, dt)
+            if self.telemetry_hook:
+                self.telemetry_hook(step, dt, {k: float(v) for k, v in metrics.items()})
+            if self.preemption.preempted:
+                ckpt.save(state, self.run_cfg.checkpoint_dir, step)
+                result.preempted = True
+                break
+            if step % self.run_cfg.checkpoint_every == 0:
+                ckpt.save(state, self.run_cfg.checkpoint_dir, step)
+                ckpt.garbage_collect(self.run_cfg.checkpoint_dir)
+        else:
+            ckpt.save(state, self.run_cfg.checkpoint_dir, step)
+        result.final_step = step
+        self._state = state
+        return result

@@ -1,0 +1,85 @@
+"""pjit train-step factory: microbatched grad accumulation + AdamW.
+
+``make_train_step`` returns (step_fn, state_shapes, state_pspecs) so callers
+(trainer, dry-run) can jit with exact in/out shardings and donate the state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.models.common import Topo
+from repro.optim import adamw_update, clip_by_global_norm, init_opt_state, \
+    opt_state_shapes, warmup_cosine
+
+
+def state_shapes(model, run_cfg: RunConfig) -> dict:
+    ps = model.param_shapes()
+    return {"params": ps, "opt": opt_state_shapes(ps, run_cfg.moment_dtype)}
+
+
+def state_pspecs(model, topo: Topo) -> dict:
+    ps = model.param_specs()
+    return {
+        "params": ps,
+        "opt": {
+            "m": jax.tree.map(lambda x: x, ps, is_leaf=lambda x: isinstance(x, P)),
+            "v": jax.tree.map(lambda x: x, ps, is_leaf=lambda x: isinstance(x, P)),
+            "step": P(),
+        },
+    }
+
+
+def init_state(model, run_cfg: RunConfig, key: jax.Array) -> dict:
+    params = model.init_params(key)
+    return {"params": params, "opt": init_opt_state(params, run_cfg.moment_dtype)}
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, run_cfg: RunConfig, topo: Topo) -> Callable:
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        return loss, metrics, grads
+
+    def step(state: dict, batch: dict):
+        params = state["params"]
+        n_mb = run_cfg.microbatches
+        if n_mb > 1:
+            mbs = _split_microbatches(batch, n_mb)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                loss, metrics, grads = grads_of(params, mb)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(a.dtype), gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            loss = loss / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, run_cfg.grad_clip)
+        lr = warmup_cosine(run_cfg, state["opt"]["step"])
+        new_params, new_opt = adamw_update(params, grads, state["opt"], run_cfg, lr)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS in-process; never globally here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

@@ -1,0 +1,104 @@
+"""Algorithm 1 (SELECT_OPTIMAL_FREQ) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algorithm1 import (cap_perf_centric, cap_power_centric,
+                                   choose_bin_size, profiling_savings,
+                                   select_optimal_freq)
+from repro.core.classify import FreqPoint, MinosClassifier, WorkloadProfile
+
+TDP = 200.0
+FREQS = [0.6, 0.7, 0.8, 0.9, 1.0]
+
+
+def _profile(name, p90_by_freq, time_by_freq, trace_level, sm=0.9, dram=0.2):
+    rng = np.random.default_rng(hash(name) % 2**31)
+    trace = rng.normal(trace_level * TDP, 6.0, 600)
+    scaling = {
+        f: FreqPoint(freq=f, p90=p90_by_freq[f], p95=p90_by_freq[f] + 0.03,
+                     p99=p90_by_freq[f] + 0.07, mean_power=p90_by_freq[f] - 0.1,
+                     exec_time=time_by_freq[f])
+        for f in FREQS
+    }
+    return WorkloadProfile(name=name, tdp=TDP, power_trace=trace,
+                           sm_util=sm, dram_util=dram, exec_time=time_by_freq[1.0],
+                           scaling=scaling)
+
+
+def _compute_bound(name="compute", level=1.3):
+    # p90 scales with frequency; time scales inversely
+    return _profile(
+        name,
+        {f: level * f for f in FREQS},
+        {f: 1.0 / f for f in FREQS},
+        trace_level=level, sm=0.95, dram=0.15)
+
+
+def _memory_bound(name="memory", level=0.7):
+    return _profile(
+        name,
+        {f: level for f in FREQS},
+        {f: 1.0 for f in FREQS},
+        trace_level=level, sm=0.1, dram=0.9)
+
+
+def test_cap_power_centric_highest_freq_meeting_bound():
+    prof = _compute_bound()
+    # p90(f) = 1.3 f < 1.3 -> any f < 1.0; highest available below = 0.9
+    assert cap_power_centric(prof, bound=1.3) == 0.9
+    assert cap_power_centric(prof, bound=2.0) == 1.0
+    # impossible bound -> lowest frequency
+    assert cap_power_centric(prof, bound=0.1) == 0.6
+
+
+def test_cap_perf_centric_lowest_freq_within_bound():
+    prof = _compute_bound()
+    # degradation(f) = 1/f - 1 <= 0.05 -> f >= 0.952 -> lowest such = 1.0
+    assert cap_perf_centric(prof, bound=0.05) == 1.0
+    # memory-bound: no degradation anywhere -> lowest freq
+    assert cap_perf_centric(_memory_bound(), bound=0.05) == 0.6
+
+
+@given(st.floats(0.5, 2.0))
+@settings(max_examples=30, deadline=None)
+def test_cap_power_monotone_in_bound(bound):
+    prof = _compute_bound()
+    f1 = cap_power_centric(prof, bound=bound)
+    f2 = cap_power_centric(prof, bound=bound + 0.2)
+    assert f2 >= f1      # looser bound can only allow higher frequency
+
+
+def test_neighbors_and_selection():
+    refs = [_compute_bound("gemm-ref", 1.3), _memory_bound("spmv-ref", 0.7),
+            _profile("hybrid-ref", {f: 0.9 + 0.3 * f for f in FREQS},
+                     {f: 1 / (0.5 + 0.5 * f) for f in FREQS}, 1.1, 0.5, 0.5)]
+    clf = MinosClassifier(refs)
+    target = _compute_bound("new-gemm", 1.28)
+    sel = select_optimal_freq(target, clf)
+    assert sel.power_neighbor == "gemm-ref"
+    assert sel.util_neighbor == "gemm-ref"
+    assert sel.f_pwr == cap_power_centric(refs[0])
+    assert sel.f_perf == cap_perf_centric(refs[0])
+
+
+def test_choose_bin_size_returns_candidate():
+    refs = [_compute_bound("a", 1.3), _memory_bound("b", 0.7)]
+    clf = MinosClassifier(refs)
+    c = choose_bin_size(_compute_bound("t", 1.25), clf, (0.05, 0.1, 0.25))
+    assert c in (0.05, 0.1, 0.25)
+
+
+def test_profiling_savings_matches_paper_formula():
+    prof = _compute_bound()
+    # sum of 1/f for FREQS; single profile at f0=1.0 costs 1.0
+    total = sum(1.0 / f for f in FREQS)
+    assert profiling_savings(prof, FREQS) == pytest.approx(1 - 1.0 / total)
+    # 9-freq sweep like the paper -> ~89-90% savings
+    freqs9 = [0.6 + 0.05 * i for i in range(9)]
+    prof9 = _profile("x", {round(f, 2): 1.0 for f in freqs9},
+                     {round(f, 2): 1.0 / f for f in freqs9}, 1.0)
+    s = profiling_savings(prof9, [round(f, 2) for f in freqs9])
+    # pure compute-bound lower bound is 1 - 1/sum(1/f) ~= 0.845; partially
+    # memory-bound workloads approach 1 - 1/9 ~= 0.889 (the paper's 89-90%)
+    assert 0.84 < s < 0.90

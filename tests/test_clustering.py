@@ -1,0 +1,98 @@
+"""Clustering primitives: correctness on known structure + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (
+    best_k_by_silhouette, cosine_distance_matrix, cut, cut_k,
+    dendrogram_order, euclidean_distance_matrix, kmeans, linkage,
+    silhouette_score,
+)
+
+
+def _three_blobs(seed=0, n=6, d=5):
+    rng = np.random.default_rng(seed)
+    centers = np.eye(3, d) * 3
+    X = np.vstack([rng.normal(0, 0.05, (n, d)) + c for c in centers])
+    return np.abs(X)
+
+
+def test_cosine_distance_matrix_properties():
+    X = _three_blobs()
+    D = cosine_distance_matrix(X)
+    assert np.allclose(D, D.T)
+    assert np.allclose(np.diag(D), 0)
+    assert D.min() >= -1e-12 and D.max() <= 2.0 + 1e-12
+    # zero vector convention
+    X2 = np.vstack([X, np.zeros(X.shape[1])])
+    D2 = cosine_distance_matrix(X2)
+    assert np.allclose(D2[-1, :-1], 1.0)
+
+
+@pytest.mark.parametrize("method", ["ward", "average", "complete", "single"])
+def test_linkage_recovers_blobs(method):
+    X = _three_blobs()
+    Z = linkage(cosine_distance_matrix(X), method)
+    labels = cut_k(Z, 3)
+    # each blob is a single cluster
+    for blk in range(3):
+        blob = labels[blk * 6:(blk + 1) * 6]
+        assert len(set(blob)) == 1
+    assert len(set(labels)) == 3
+
+
+def test_linkage_shape_and_sizes():
+    X = _three_blobs(n=4)
+    Z = linkage(cosine_distance_matrix(X), "average")
+    n = X.shape[0]
+    assert Z.shape == (n - 1, 4)
+    assert Z[-1, 3] == n                      # final merge holds everything
+    order = dendrogram_order(Z)
+    assert sorted(order) == list(range(n))
+
+
+def test_cut_thresholds():
+    X = _three_blobs()
+    Z = linkage(cosine_distance_matrix(X), "average")
+    assert len(set(cut(Z, 1e9))) == 1
+    assert len(set(cut(Z, -1.0))) == len(X)
+
+
+def test_kmeans_recovers_blobs():
+    X = _three_blobs(seed=3)
+    centers, labels, inertia = kmeans(X, 3, seed=0)
+    assert len(set(np.asarray(labels).tolist())) == 3
+    assert silhouette_score(X, np.asarray(labels)) > 0.8
+
+
+def test_kmeans_inertia_decreases_with_k():
+    X = _three_blobs(seed=4)
+    inertias = [kmeans(X, k, seed=0)[2] for k in (1, 2, 3, 5)]
+    assert all(a >= b - 1e-9 for a, b in zip(inertias, inertias[1:]))
+
+
+def test_silhouette_best_k():
+    X = _three_blobs(seed=5)
+    best, scores = best_k_by_silhouette(X, k_range=range(2, 8), seed=0)
+    assert best == 3
+
+
+@given(st.integers(4, 24), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_silhouette_bounds_random(n, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3))
+    _, labels, _ = kmeans(X, 3, seed=seed)
+    s = silhouette_score(X, np.asarray(labels))
+    assert -1.0 - 1e-9 <= s <= 1.0 + 1e-9
+
+
+@given(st.integers(5, 16), st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_cut_k_returns_k_clusters(n, seed):
+    rng = np.random.default_rng(seed)
+    X = np.abs(rng.normal(size=(n, 4))) + 0.1
+    Z = linkage(cosine_distance_matrix(X), "ward")
+    for k in (1, 2, 3, n):
+        labels = cut_k(Z, k)
+        assert len(set(labels)) == min(k, n)

@@ -1,0 +1,89 @@
+"""End-to-end Minos behaviour on simulated telemetry (small, fast zoo)."""
+import numpy as np
+import pytest
+
+from repro.analysis.hardware import V5E
+from repro.core import MinosClassifier, select_optimal_freq
+from repro.core.algorithm1 import cap_power_centric
+from repro.core.baselines import mean_power_neighbor
+from repro.core.reference_store import load_profiles, save_profiles
+from repro.telemetry import TPUPowerModel, profile_once, profile_workload
+from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
+                                           micro_spmv_compute,
+                                           micro_spmv_memory, micro_stencil,
+                                           micro_vector_search)
+
+FREQS = (0.6, 0.8, 1.0)
+
+
+@pytest.fixture(scope="module")
+def small_refs():
+    model = TPUPowerModel()
+    tdp = model.spec.tdp_w
+    streams = [micro_gemm(), micro_spmv_memory(), micro_spmv_compute(),
+               micro_idle_burst(), micro_stencil()]
+    return [profile_workload(s, model, FREQS, tdp, seed=i,
+                             target_duration=1.0)
+            for i, s in enumerate(streams)]
+
+
+def test_power_neighbor_is_sane(small_refs):
+    model = TPUPowerModel()
+    clf = MinosClassifier(small_refs)
+    target = profile_once(micro_vector_search(), model, model.spec.tdp_w, seed=42)
+    nn, d = clf.power_neighbor(target)
+    # FAISS-like batched distance GEMMs look like compute-bound workloads
+    assert nn.name in ("sgemm-25k", "mpsdns-like", "pagerank-gunrock")
+    assert d < 0.5
+
+
+def test_util_classes_separate_compute_from_memory(small_refs):
+    clf = MinosClassifier(small_refs)
+    util = {r.name: r.util_point for r in small_refs}
+    assert util["sgemm-25k"][1] > 0.9          # SM util high
+    assert util["pagerank-pannotia"][0] > 0.9  # DRAM util high
+    labels, centers, k, _ = clf.util_classes(k=2)
+    by_name = dict(zip([r.name for r in small_refs], labels))
+    assert by_name["sgemm-25k"] != by_name["pagerank-pannotia"]
+
+
+def test_full_selection_and_prediction_accuracy(small_refs):
+    model = TPUPowerModel()
+    tdp = model.spec.tdp_w
+    clf = MinosClassifier(small_refs)
+    observed = profile_once(micro_vector_search(), model, tdp, seed=7)
+    sel = select_optimal_freq(observed, clf)
+    assert sel.f_pwr in FREQS and sel.f_perf in FREQS
+    # ground truth (never shown to Minos): profile the target at the cap
+    truth = profile_workload(micro_vector_search(), model, FREQS, tdp, seed=7)
+    pred_p90 = next(r for r in small_refs if r.name == sel.power_neighbor
+                    ).scaling[sel.f_pwr].p90
+    true_p90 = truth.scaling[sel.f_pwr].p90
+    assert abs(pred_p90 - true_p90) < 0.25
+
+
+def test_minos_beats_or_matches_mean_power_on_bursty(small_refs):
+    """The bursty LSMS-like workload is the paper's counterexample to
+    mean-power classification."""
+    model = TPUPowerModel()
+    tdp = model.spec.tdp_w
+    clf = MinosClassifier(small_refs)
+    target = profile_once(micro_idle_burst(bursts=5, gap_s=0.1), model, tdp, seed=3)
+    target.name = "idle-burst-variant"
+    nn_minos, _ = clf.power_neighbor(target)
+    nn_mean, _ = mean_power_neighbor(target, small_refs)
+    assert nn_minos.name == "lsms-like"
+    # evaluate p90 prediction quality at uncapped freq
+    err_minos = abs(target.p_quantile(90) - nn_minos.p_quantile(90))
+    err_mean = abs(target.p_quantile(90) - nn_mean.p_quantile(90))
+    assert err_minos <= err_mean + 0.05
+
+
+def test_reference_store_roundtrip(small_refs, tmp_path):
+    save_profiles(small_refs, str(tmp_path))
+    loaded = load_profiles(str(tmp_path))
+    assert {r.name for r in loaded} == {r.name for r in small_refs}
+    a = next(r for r in loaded if r.name == "sgemm-25k")
+    b = next(r for r in small_refs if r.name == "sgemm-25k")
+    assert a.scaling[1.0].p90 == pytest.approx(b.scaling[1.0].p90, rel=1e-5)
+    np.testing.assert_allclose(a.power_trace, b.power_trace, rtol=1e-5)

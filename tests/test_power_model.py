@@ -1,0 +1,60 @@
+"""Power model invariants (the simulator's physics)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hardware import V5E
+from repro.telemetry.kernel_stream import Kernel
+from repro.telemetry.power_model import TPUPowerModel
+
+
+@pytest.fixture(scope="module")
+def model():
+    return TPUPowerModel()
+
+
+def test_calibration_points(model):
+    tdp = V5E.tdp_w
+    assert model.steady_power(1.0, 0.2, 1.0) == pytest.approx(1.3 * tdp, rel=1e-6)
+    assert model.steady_power(0.15, 0.9, 1.0) == pytest.approx(0.75 * tdp, rel=1e-6)
+    assert model.steady_power(0.0, 0.0, 1.0) == pytest.approx(V5E.idle_w)
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+       st.floats(V5E.f_min, V5E.f_max))
+@settings(max_examples=60, deadline=None)
+def test_power_monotone_in_util_and_freq(uc, um, f):
+    m = TPUPowerModel()
+    p = m.steady_power(uc, um, f)
+    assert p >= V5E.idle_w - 1e-9
+    assert m.steady_power(min(uc + 0.1, 1.0), um, f) >= p - 1e-9
+    assert m.steady_power(uc, min(um + 0.1, 1.0), f) >= p - 1e-9
+    assert m.steady_power(uc, um, min(f + 0.05, 1.0)) >= p - 1e-9
+
+
+def test_compute_bound_kernel_scales_with_freq(model):
+    k = Kernel("gemm", flops=1e12, bytes=1e9)
+    full = model.exec_kernel(k, 1.0)
+    slow = model.exec_kernel(k, 0.6)
+    assert slow.duration == pytest.approx(full.duration / 0.6, rel=1e-3)
+    assert full.util_c > 0.95
+
+
+def test_memory_bound_kernel_invariant_to_cap(model):
+    k = Kernel("stream", flops=1e9, bytes=1e12)
+    full = model.exec_kernel(k, 1.0)
+    slow = model.exec_kernel(k, 0.6)
+    assert slow.duration == pytest.approx(full.duration, rel=1e-3)
+    assert full.util_m > 0.95
+    assert slow.power <= full.power + 1e-9
+
+
+@given(st.floats(V5E.idle_w, 1.3 * V5E.tdp_w),
+       st.floats(V5E.idle_w, 1.3 * V5E.tdp_w))
+@settings(max_examples=60, deadline=None)
+def test_overshoot_respects_ocp_ceiling(p_prev, p_new):
+    m = TPUPowerModel()
+    amp = m.overshoot(p_prev, p_new)
+    if amp is not None:
+        assert p_new - p_prev >= 30.0
+        assert amp <= V5E.max_excursion * V5E.tdp_w + 1e-9
+        assert amp >= p_new - 1e-9

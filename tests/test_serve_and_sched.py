@@ -1,0 +1,67 @@
+"""Serving engine + Minos-driven power scheduler."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.common import SMOKE_TOPO
+from repro.serve import ServeEngine
+from repro.core.classify import FreqPoint, MinosClassifier, WorkloadProfile
+from repro.sched import PowerAwareScheduler, SimActuator
+
+TDP = 200.0
+
+
+def test_generate_shapes_and_determinism():
+    cfg = ARCHS["glm4-9b"].reduced(num_layers=2)
+    eng = ServeEngine(cfg, SMOKE_TOPO, max_len=40)
+    params = eng.init_params(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)}
+    out1 = eng.generate(params, batch, 6)
+    out2 = eng.generate(params, batch, 6)
+    assert out1.shape == (2, 6)
+    np.testing.assert_array_equal(out1, out2)
+    assert np.all(out1 >= 0) and np.all(out1 < cfg.vocab_size)
+
+
+def test_generate_rejects_overflow():
+    cfg = ARCHS["glm4-9b"].reduced(num_layers=2)
+    eng = ServeEngine(cfg, SMOKE_TOPO, max_len=20)
+    params = eng.init_params(jax.random.key(0))
+    batch = {"tokens": np.zeros((1, 16), np.int32)}
+    with pytest.raises(ValueError):
+        eng.generate(params, batch, 10)
+
+
+def _ref(name, lvl, sm, dram, freq_sensitivity=1.0):
+    rng = np.random.default_rng(abs(hash(name)) % 2**31)
+    freqs = [0.6, 0.8, 1.0]
+    scaling = {f: FreqPoint(freq=f, p90=lvl * (f ** freq_sensitivity),
+                            p95=lvl * f + 0.03, p99=lvl * f + 0.06,
+                            mean_power=lvl * f - 0.1, exec_time=1.0 / f)
+               for f in freqs}
+    return WorkloadProfile(name, TDP, rng.normal(lvl * TDP, 5.0, 400),
+                           sm, dram, 1.0, scaling)
+
+
+def test_actuator_clamps():
+    act = SimActuator()
+    act.set_cap(0.3)
+    assert act.get_cap() == pytest.approx(0.6)
+    act.set_cap(1.4)
+    assert act.get_cap() == pytest.approx(1.0)
+
+
+def test_power_scheduler_packs_within_budget():
+    refs = [_ref("hot", 1.4, 0.95, 0.1), _ref("cool", 0.7, 0.1, 0.9)]
+    clf = MinosClassifier(refs)
+    sched = PowerAwareScheduler(clf, tdp_w=TDP, objective="powercentric")
+    jobs = [(_ref("job-hot", 1.38, 0.93, 0.12), 16),
+            (_ref("job-cool", 0.72, 0.12, 0.88), 16)]
+    budget = 16 * TDP * 1.35 + 16 * TDP * 0.8
+    res = sched.schedule(jobs, budget_w=budget)
+    assert len(res.placed) == 2
+    assert res.planned_power_w <= budget
+    tight = sched.schedule(jobs, budget_w=16 * TDP * 0.9)
+    assert len(tight.deferred) >= 1

@@ -1,0 +1,64 @@
+"""Telemetry simulator behavior (what the paper measures on hardware)."""
+import numpy as np
+import pytest
+
+from repro.analysis.hardware import V5E
+from repro.core import spikes
+from repro.telemetry import TPUPowerModel, simulate
+from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
+                                           micro_spmv_memory)
+
+TDP = V5E.tdp_w
+
+
+@pytest.fixture(scope="module")
+def model():
+    return TPUPowerModel()
+
+
+def test_trace_ranges(model):
+    tr = simulate(micro_gemm(), 1.0, model, seed=1)
+    assert len(tr.power_filtered) > 100
+    assert tr.power_filtered.min() > 0
+    assert tr.power_filtered.max() <= V5E.max_excursion * TDP * 1.6  # noise slack
+    assert 0.0 <= tr.app_sm_util <= 1.0
+    assert 0.0 <= tr.app_dram_util <= 1.0
+
+
+def test_compute_stream_shifts_left_under_cap(model):
+    hi = simulate(micro_gemm(), 1.0, model, seed=2)
+    lo = simulate(micro_gemm(), 0.6, model, seed=2)
+    p_hi = spikes.p_quantile(hi.power_filtered, TDP, 90)
+    p_lo = spikes.p_quantile(lo.power_filtered, TDP, 90)
+    assert p_lo < p_hi - 0.2
+    assert lo.exec_time > hi.exec_time * 1.5
+
+
+def test_memory_stream_invariant_under_cap(model):
+    hi = simulate(micro_spmv_memory(), 1.0, model, seed=3)
+    lo = simulate(micro_spmv_memory(), 0.6, model, seed=3)
+    p_hi = spikes.p_quantile(hi.power_filtered, TDP, 90)
+    p_lo = spikes.p_quantile(lo.power_filtered, TDP, 90)
+    assert abs(p_hi - p_lo) < 0.08
+    assert lo.exec_time == pytest.approx(hi.exec_time, rel=0.05)
+
+
+def test_idle_burst_has_spikes_and_idle(model):
+    tr = simulate(micro_idle_burst(), 1.0, model, seed=4)
+    rel = tr.power_filtered / TDP
+    assert np.max(rel) > 1.3          # burst overshoots
+    assert np.percentile(rel, 20) < 0.6   # mostly idle-ish
+    v = spikes.spike_vector(tr.power_filtered, TDP)
+    assert v.sum() == pytest.approx(1.0)
+
+
+def test_determinism(model):
+    a = simulate(micro_gemm(), 1.0, model, seed=9)
+    b = simulate(micro_gemm(), 1.0, model, seed=9)
+    np.testing.assert_allclose(a.power_filtered, b.power_filtered)
+
+
+def test_busy_trimming(model):
+    tr = simulate(micro_idle_burst(), 1.0, model, seed=5)
+    # the raw trace has idle padding; the filtered one is trimmed
+    assert len(tr.power_filtered) <= len(tr.power_raw)

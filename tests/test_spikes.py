@@ -1,0 +1,82 @@
+"""Unit + property tests for the paper's §4.1/§5.3.1 trace pipeline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spikes
+
+TDP = 200.0
+
+
+def test_ema_alpha_half_is_successive_average():
+    x = np.array([0.0, 10.0, 20.0, 30.0])
+    y = spikes.ema_filter(x, alpha=0.5)
+    # paper: P_filt(t) = (P(t) + P_filt(t-1)) / 2
+    assert y[0] == 0.0
+    assert y[1] == 5.0
+    assert y[2] == 12.5
+
+
+def test_trim_idle():
+    p = np.arange(10.0)
+    busy = np.array([0, 0, 1, 1, 0, 1, 0, 0, 0, 0])
+    out = spikes.trim_idle(p, busy)
+    np.testing.assert_array_equal(out, p[2:6])
+    assert len(spikes.trim_idle(p, np.zeros(10))) == 0
+
+
+def test_spike_vector_basic():
+    # samples at 0.55, 0.55, 1.25 x TDP plus sub-threshold ones
+    p = np.array([0.1, 0.55, 0.55, 1.25, 0.3]) * TDP
+    v = spikes.spike_vector(p, TDP, bin_size=0.1)
+    assert len(v) == 15
+    assert v[0] == pytest.approx(2 / 3)       # [0.5, 0.6)
+    assert v[7] == pytest.approx(1 / 3)       # [1.2, 1.3)
+    assert v.sum() == pytest.approx(1.0)
+
+
+def test_spike_vector_no_spikes_is_zero():
+    p = np.full(100, 0.3) * TDP
+    v = spikes.spike_vector(p, TDP)
+    assert v.sum() == 0.0
+
+
+@given(st.lists(st.floats(0.0, 2.5), min_size=1, max_size=500),
+       st.sampled_from([0.05, 0.1, 0.15, 0.25]))
+@settings(max_examples=50, deadline=None)
+def test_spike_vector_properties(rel, c):
+    p = np.array(rel) * TDP
+    v = spikes.spike_vector(p, TDP, bin_size=c)
+    n = spikes.num_bins(c)
+    assert len(v) == n
+    assert np.all(v >= 0)
+    # normalized iff any spike exists
+    if np.any(np.array(rel) >= 0.5):
+        assert v.sum() == pytest.approx(1.0)
+    else:
+        assert v.sum() == 0.0
+    # permutation invariance (a distribution, not a time series)
+    rng = np.random.default_rng(0)
+    v2 = spikes.spike_vector(rng.permutation(p), TDP, bin_size=c)
+    np.testing.assert_allclose(v, v2)
+
+
+@given(st.lists(st.floats(10.0, 500.0), min_size=2, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_ema_bounded_by_input_range(vals):
+    x = np.array(vals)
+    y = spikes.ema_filter(x, alpha=0.5)
+    assert np.all(y >= x.min() - 1e-9)
+    assert np.all(y <= x.max() + 1e-9)
+
+
+def test_quantiles_and_mean():
+    p = np.linspace(0.0, 2.0, 101) * TDP
+    assert spikes.p_quantile(p, TDP, 90) == pytest.approx(1.8, abs=0.02)
+    assert spikes.mean_power_rel(p, TDP) == pytest.approx(1.0, abs=0.01)
+
+
+def test_power_from_energy():
+    e = np.cumsum(np.full(11, 0.2))          # 0.2 J per 1 ms -> 200 W
+    p = spikes.power_from_energy(e, 1e-3)
+    np.testing.assert_allclose(p, 200.0)
