@@ -19,12 +19,11 @@ def run() -> dict:
     uniq = unique_workloads(reference_library())
     clf = MinosClassifier(uniq)
     errs = {}
+    p90 = {r.name: r.p_quantile(90) for r in uniq}
     for c in BIN_SIZES:
-        per = []
-        for target in uniq:
-            nn, _ = clf.power_neighbor(target, bin_size=c)
-            per.append(abs(target.p_quantile(90) - nn.p_quantile(90)))
-        errs[c] = float(np.mean(per))
+        neighbors = clf.power_neighbors(uniq, bin_size=c)
+        errs[c] = float(np.mean([abs(p90[t.name] - p90[nn.name])
+                                 for t, (nn, _) in zip(uniq, neighbors)]))
     base = errs[0.1] or 1e-9
     norm = {str(c): round(errs[c] / base, 3) for c in BIN_SIZES}
     out = {"raw": {str(c): round(v, 4) for c, v in errs.items()},

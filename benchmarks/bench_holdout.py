@@ -9,9 +9,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (RESULTS, emit, holdout_perf_error,
-                               holdout_power_error, reference_library,
-                               unique_workloads)
+from benchmarks.common import (RESULTS, emit, holdout_neighbors,
+                               holdout_perf_error, holdout_power_error,
+                               reference_library, unique_workloads)
 from repro.core import MinosClassifier
 
 
@@ -20,10 +20,9 @@ def run() -> dict:
     refs = reference_library()
     uniq = unique_workloads(refs)
     clf = MinosClassifier(uniq)
+    pwr_nn, util_nn = holdout_neighbors(clf, uniq)
     rows = []
-    for target in uniq:
-        nn_pwr, d_pwr = clf.power_neighbor(target)
-        nn_perf, d_perf = clf.util_neighbor(target)
+    for target, (nn_pwr, d_pwr), (nn_perf, d_perf) in zip(uniq, pwr_nn, util_nn):
         rec = {"target": target.name, "power_neighbor": nn_pwr.name,
                "cos_distance": round(d_pwr, 4),
                "perf_neighbor": nn_perf.name,

@@ -46,6 +46,19 @@ def unique_workloads(refs: list[WorkloadProfile]) -> list[WorkloadProfile]:
     return out
 
 
+def holdout_neighbors(clf: MinosClassifier, targets: list[WorkloadProfile],
+                      bin_size: float | None = None):
+    """Hold-one-out neighbor lookup for a whole target batch at once.
+
+    Self-exclusion by workload name is built into the classifier's batched
+    APIs, so this is two distance-matrix ops total; returns the two aligned
+    lists of (neighbor, distance): power (cosine) and utilization
+    (Euclidean).
+    """
+    return (clf.power_neighbors(targets, bin_size=bin_size),
+            clf.util_neighbors(targets))
+
+
 def nearest_freq(profile: WorkloadProfile, f: float) -> float:
     return min(profile.scaling, key=lambda x: abs(x - f))
 

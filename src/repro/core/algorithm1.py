@@ -42,11 +42,16 @@ class FreqSelection:
 def choose_bin_size(target: WorkloadProfile, clf: MinosClassifier,
                     candidates=DEFAULT_BIN_CANDIDATES,
                     quantile: float = 90.0) -> float:
-    """Err_c(T) = |p90(T) - p90(NN_c(T))| at the profiled frequency (§7.4)."""
+    """Err_c(T) = |p90(T) - p90(NN_c(T))| at the profiled frequency (§7.4).
+
+    Each candidate bin size hits the classifier's cached spike matrix, so a
+    sweep re-histograms the target once per c but the references only once
+    per c *per classifier lifetime* (not per call).
+    """
     best_c, best_err = candidates[0], np.inf
     p_t = target.p_quantile(quantile)
     for c in candidates:
-        nn, _ = clf.power_neighbor(target, bin_size=c)
+        (nn, _), = clf.power_neighbors([target], bin_size=c)
         err = abs(p_t - nn.p_quantile(quantile))
         if err < best_err:
             best_c, best_err = c, err
@@ -79,8 +84,8 @@ def cap_perf_centric(neighbor: WorkloadProfile, bound: float = PERF_BOUND) -> fl
 def select_optimal_freq(target: WorkloadProfile, clf: MinosClassifier,
                         bin_candidates=DEFAULT_BIN_CANDIDATES) -> FreqSelection:
     c_star = choose_bin_size(target, clf, bin_candidates)
-    r_pwr, d_pwr = clf.power_neighbor(target, bin_size=c_star)
-    r_util, d_util = clf.util_neighbor(target)
+    (r_pwr, d_pwr), = clf.power_neighbors([target], bin_size=c_star)
+    (r_util, d_util), = clf.util_neighbors([target])
     return FreqSelection(
         target=target.name,
         bin_size=c_star,

@@ -6,10 +6,17 @@ A ``WorkloadProfile`` is what one low-cost profiling run produces:
   * optionally, per-frequency scaling data {freq: FreqPoint} — available only
     for *reference* workloads (that is exactly the paper's premise: new
     workloads are profiled once, at the default clock).
+
+``MinosClassifier`` owns the reference set: it caches the reference spike
+matrix per bin size and the utilization matrix, and answers nearest-neighbor
+queries in batch (``power_neighbors`` / ``util_neighbors``) as single
+(n_targets, n_refs) distance-matrix ops — the engine behind Algorithm 1 and
+the hold-one-out benchmarks.
 """
 from __future__ import annotations
 
 import json
+import numbers
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -74,18 +81,52 @@ def app_utilization(kernels: list[tuple[float, float, float]]) -> tuple[float, f
 
 
 class MinosClassifier:
-    """Power-spike (hierarchical/cosine) + utilization (K-Means) classifier."""
+    """Power-spike (hierarchical/cosine) + utilization (K-Means) classifier.
+
+    The classifier treats its reference set as immutable after construction
+    and memoizes the expensive per-reference features:
+
+      * ``spike_matrix(c)`` — the (n_refs, n_bins) stack of spike vectors —
+        is cached per bin size, so a ``choose_bin_size`` sweep or a
+        hold-one-out benchmark histograms each reference trace once per c
+        instead of once per query.
+      * ``util_matrix()`` — the (n_refs, 2) utilization points — is cached
+        outright.
+
+    Nearest-neighbor queries come in batched form (``power_neighbors`` /
+    ``util_neighbors``): all target-vs-reference distances are computed as a
+    single (n_targets, n_refs) matrix op, with self-matches (same workload
+    name) and an optional ``exclude`` name masked out.  The scalar
+    ``power_neighbor`` / ``util_neighbor`` wrappers are one-target batches.
+    """
 
     def __init__(self, references: list[WorkloadProfile], bin_size: float = 0.1):
         if not references:
             raise ValueError("empty reference set")
         self.references = list(references)
-        self.bin_size = bin_size
+        self.bin_size = self._validate_bin(bin_size)
+        self._ref_names = np.array([r.name for r in self.references])
+        self._spike_cache: dict[float, np.ndarray] = {}
+        self._util_cache: np.ndarray | None = None
+
+    @staticmethod
+    def _validate_bin(c) -> float:
+        if isinstance(c, bool) or not isinstance(c, numbers.Real) or not c > 0:
+            raise ValueError(f"bin_size must be a positive number, got {c!r}")
+        return float(c)
+
+    def _resolve_bin(self, bin_size: float | None) -> float:
+        return self.bin_size if bin_size is None else self._validate_bin(bin_size)
 
     # -- power side -----------------------------------------------------
     def spike_matrix(self, bin_size: float | None = None) -> np.ndarray:
-        c = bin_size or self.bin_size
-        return np.stack([r.spike_vec(c) for r in self.references])
+        """(n_refs, n_bins) reference spike vectors, cached per bin size."""
+        c = self._resolve_bin(bin_size)
+        M = self._spike_cache.get(c)
+        if M is None:
+            M = np.stack([r.spike_vec(c) for r in self.references])
+            self._spike_cache[c] = M
+        return M
 
     def power_linkage(self, bin_size: float | None = None) -> np.ndarray:
         D = cosine_distance_matrix(self.spike_matrix(bin_size))
@@ -95,23 +136,35 @@ class MinosClassifier:
         """Dendrogram slice for interpretation only (predictions use NN)."""
         return cut_k(self.power_linkage(bin_size), k)
 
+    def power_neighbors(self, targets: list[WorkloadProfile],
+                        bin_size: float | None = None,
+                        exclude: str | None = None
+                        ) -> list[tuple[WorkloadProfile, float]]:
+        """Nearest reference by cosine distance, for a batch of targets.
+
+        One (n_targets, n_refs) distance matrix; per-target self-exclusion
+        by workload name plus the optional shared ``exclude`` name.  Raises
+        ``ValueError`` if some target has every reference excluded.
+        """
+        c = self._resolve_bin(bin_size)
+        if self._is_reference_batch(targets):
+            T = self.spike_matrix(c)           # hold-one-out: reuse the cache
+        else:
+            T = np.stack([t.spike_vec(c) for t in targets])
+        D = _cosine_distances(T, self.spike_matrix(c))
+        return self._pick(D, targets, exclude)
+
     def power_neighbor(self, target: WorkloadProfile,
                        bin_size: float | None = None,
                        exclude: str | None = None) -> tuple[WorkloadProfile, float]:
-        c = bin_size or self.bin_size
-        v = target.spike_vec(c)
-        best, best_d = None, np.inf
-        for r in self.references:
-            if r.name == target.name or r.name == exclude:
-                continue
-            d = _cosine_distance(v, r.spike_vec(c))
-            if d < best_d:
-                best, best_d = r, d
-        return best, float(best_d)
+        return self.power_neighbors([target], bin_size, exclude)[0]
 
     # -- utilization side -------------------------------------------------
     def util_matrix(self) -> np.ndarray:
-        return np.stack([r.util_point for r in self.references])
+        """(n_refs, 2) [dram_util, sm_util] reference points, cached."""
+        if self._util_cache is None:
+            self._util_cache = np.stack([r.util_point for r in self.references])
+        return self._util_cache
 
     def util_classes(self, k: int | None = None, seed: int = 0):
         X = self.util_matrix()
@@ -122,21 +175,57 @@ class MinosClassifier:
         centers, labels, _ = kmeans(X, k, seed=seed)
         return labels, centers, k, scores
 
+    def util_neighbors(self, targets: list[WorkloadProfile],
+                       exclude: str | None = None
+                       ) -> list[tuple[WorkloadProfile, float]]:
+        """Nearest reference by Euclidean distance in utilization space, for
+        a batch of targets (one (n_targets, n_refs) matrix op; exclusion
+        semantics as in ``power_neighbors``)."""
+        if self._is_reference_batch(targets):
+            T = self.util_matrix()
+        else:
+            T = np.stack([t.util_point for t in targets])
+        diff = T[:, None, :] - self.util_matrix()[None, :, :]
+        D = np.sqrt(np.sum(diff * diff, axis=-1))
+        return self._pick(D, targets, exclude)
+
     def util_neighbor(self, target: WorkloadProfile,
                       exclude: str | None = None) -> tuple[WorkloadProfile, float]:
-        v = target.util_point
-        best, best_d = None, np.inf
-        for r in self.references:
-            if r.name == target.name or r.name == exclude:
-                continue
-            d = float(np.linalg.norm(v - r.util_point))
-            if d < best_d:
-                best, best_d = r, d
-        return best, best_d
+        return self.util_neighbors([target], exclude)[0]
+
+    # -- shared ----------------------------------------------------------
+    def _is_reference_batch(self, targets: list[WorkloadProfile]) -> bool:
+        """True when the target batch is exactly the reference set (the
+        hold-one-out pattern), so cached feature matrices can stand in for
+        the target-side stack."""
+        return len(targets) == len(self.references) and \
+            all(t is r for t, r in zip(targets, self.references))
+
+    def _pick(self, D: np.ndarray, targets: list[WorkloadProfile],
+              exclude: str | None) -> list[tuple[WorkloadProfile, float]]:
+        masked = self._ref_names[None, :] == \
+            np.array([t.name for t in targets], dtype=object)[:, None]
+        if exclude is not None:
+            masked |= self._ref_names[None, :] == exclude
+        D = np.where(masked, np.inf, D)
+        idx = np.argmin(D, axis=1)
+        best = D[np.arange(len(targets)), idx]
+        if np.any(np.isinf(best)):
+            bad = targets[int(np.nonzero(np.isinf(best))[0][0])].name
+            raise ValueError(
+                f"no eligible reference for target {bad!r}: every reference "
+                f"is excluded (self-match or exclude={exclude!r})")
+        return [(self.references[i], float(d)) for i, d in zip(idx, best)]
 
 
-def _cosine_distance(a: np.ndarray, b: np.ndarray) -> float:
-    na, nb = np.linalg.norm(a), np.linalg.norm(b)
-    if na == 0 or nb == 0:
-        return 1.0
-    return float(1.0 - np.clip(np.dot(a, b) / (na * nb), -1.0, 1.0))
+def _cosine_distances(A: np.ndarray, B: np.ndarray) -> np.ndarray:
+    """Pairwise cosine distances between the rows of A and of B; rows with
+    zero norm are at distance 1 from everything (the seed convention)."""
+    na = np.linalg.norm(A, axis=1)
+    nb = np.linalg.norm(B, axis=1)
+    Ua = A / np.where(na > 0, na, 1.0)[:, None]
+    Ub = B / np.where(nb > 0, nb, 1.0)[:, None]
+    D = 1.0 - np.clip(Ua @ Ub.T, -1.0, 1.0)
+    D[na == 0, :] = 1.0
+    D[:, nb == 0] = 1.0
+    return D

@@ -71,45 +71,42 @@ def linkage(dist: np.ndarray, method: str = "ward") -> np.ndarray:
     if method == "ward":
         D = D * D
     np.fill_diagonal(D, np.inf)
-    sizes = {i: 1 for i in range(n)}
-    ids = {i: i for i in range(n)}          # row -> cluster id
-    active = list(range(n))
+    sizes = np.ones(n)
+    ids = np.arange(n)                      # row -> cluster id
+    alive = np.ones(n, bool)
     Z = np.zeros((n - 1, 4))
-    big = np.full(D.shape, np.inf)
-    big[:D.shape[0], :D.shape[1]] = D
-    D = big
     next_id = n
     for step in range(n - 1):
-        # find closest active pair
-        sub = D[np.ix_(active, active)]
-        flat = np.argmin(sub)
-        a, b = divmod(flat, len(active))
-        if a == b:
+        # closest pair: dead rows/cols are held at inf, so a flat argmin over
+        # the full matrix finds the same first-minimum as the seed's
+        # active-submatrix scan (row-major order is preserved)
+        i, j = divmod(int(np.argmin(D)), n)
+        if i == j:
             raise RuntimeError("degenerate linkage state")
-        i, j = active[a], active[b]
         if i > j:
             i, j = j, i
         dij = D[i, j]
         d_rep = np.sqrt(dij) if method == "ward" else dij
         Z[step] = [ids[i], ids[j], d_rep, sizes[i] + sizes[j]]
         ni, nj = sizes[i], sizes[j]
-        # update distances of the merged cluster (stored in slot i)
-        for k in active:
-            if k in (i, j):
-                continue
-            nk = sizes[k]
-            dik, djk = D[i, k], D[j, k]
-            if method == "ward":
-                tot = ni + nj + nk
-                new = ((ni + nk) * dik + (nj + nk) * djk - nk * dij) / tot
-            else:
-                ai, aj, bb, g = _LW[method](ni, nj, nk)
-                new = ai * dik + aj * djk + bb * dij + g * abs(dik - djk)
-            D[i, k] = D[k, i] = new
+        # Lance-Williams update of the merged cluster (stored in slot i),
+        # one vectorized pass over the surviving rows
+        upd = alive.copy()
+        upd[i] = upd[j] = False
+        nk = sizes[upd]
+        dik, djk = D[i, upd], D[j, upd]
+        if method == "ward":
+            new = ((ni + nk) * dik + (nj + nk) * djk - nk * dij) \
+                / (ni + nj + nk)
+        else:
+            ai, aj, bb, g = _LW[method](ni, nj, nk)
+            new = ai * dik + aj * djk + bb * dij + g * np.abs(dik - djk)
+        D[i, upd] = new
+        D[upd, i] = new
         sizes[i] = ni + nj
         ids[i] = next_id
         next_id += 1
-        active.remove(j)
+        alive[j] = False
         D[j, :] = np.inf
         D[:, j] = np.inf
     return Z
@@ -188,6 +185,26 @@ def _lloyd(X: jax.Array, init: jax.Array, k: int, iters: int):
     return centers, labels, inertia
 
 
+def kmeanspp_init(X: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    """kmeans++ seeding with an incrementally-maintained nearest-center
+    distance (O(kn) instead of recomputing all centers each draw, O(k^2 n)).
+    Draws the same RNG stream — and therefore the same centers — as the
+    recompute-everything seed loop (``repro.legacy.kmeanspp_init_loop``)."""
+    X = np.asarray(X, np.float64)
+    centers = np.empty((k, X.shape[1]))
+    centers[0] = X[rng.integers(len(X))]
+    d2 = np.sum((X - centers[0]) ** 2, axis=1)
+    for m in range(1, k):
+        tot = d2.sum()
+        if tot <= 0:
+            idx = rng.integers(len(X))
+        else:
+            idx = rng.choice(len(X), p=d2 / tot)
+        centers[m] = X[idx]
+        d2 = np.minimum(d2, np.sum((X - centers[m]) ** 2, axis=1))
+    return centers
+
+
 def kmeans(X: np.ndarray, k: int, seed: int = 0, iters: int = 50,
            restarts: int = 4):
     """K-Means with kmeans++ seeding; returns (centers, labels, inertia)."""
@@ -195,17 +212,8 @@ def kmeans(X: np.ndarray, k: int, seed: int = 0, iters: int = 50,
     rng = np.random.default_rng(seed)
     best = None
     for _ in range(restarts):
-        centers = [X[rng.integers(len(X))]]
-        while len(centers) < k:
-            d2 = np.min(
-                [np.sum((X - c) ** 2, axis=1) for c in centers], axis=0)
-            tot = d2.sum()
-            if tot <= 0:
-                centers.append(X[rng.integers(len(X))])
-                continue
-            centers.append(X[rng.choice(len(X), p=d2 / tot)])
-        c, lab, inertia = _lloyd(jnp.asarray(X), jnp.asarray(np.stack(centers)),
-                                 k, iters)
+        init = kmeanspp_init(X, k, rng)
+        c, lab, inertia = _lloyd(jnp.asarray(X), jnp.asarray(init), k, iters)
         inertia = float(inertia)
         if best is None or inertia < best[2]:
             best = (np.asarray(c), np.asarray(lab), inertia)
@@ -213,28 +221,30 @@ def kmeans(X: np.ndarray, k: int, seed: int = 0, iters: int = 50,
 
 
 def silhouette_score(X: np.ndarray, labels: np.ndarray) -> float:
+    """Mean silhouette, fully vectorized: the per-point distance sums to every
+    cluster come from one (n, k) matmul of the distance matrix against the
+    cluster one-hot, instead of per-point/per-cluster Python loops."""
     X = np.asarray(X, np.float64)
     labels = np.asarray(labels)
     n = len(X)
-    uniq = np.unique(labels)
-    if len(uniq) < 2 or n < 3:
+    uniq, inv = np.unique(labels, return_inverse=True)
+    k = len(uniq)
+    if k < 2 or n < 3:
         return 0.0
     D = euclidean_distance_matrix(X)
-    s = np.zeros(n)
-    for i in range(n):
-        same = labels == labels[i]
-        n_same = same.sum()
-        if n_same <= 1:
-            s[i] = 0.0
-            continue
-        a = D[i, same].sum() / (n_same - 1)
-        b = np.inf
-        for c in uniq:
-            if c == labels[i]:
-                continue
-            mask = labels == c
-            b = min(b, D[i, mask].mean())
-        s[i] = (b - a) / max(a, b) if max(a, b) > 0 else 0.0
+    onehot = np.zeros((n, k))
+    onehot[np.arange(n), inv] = 1.0
+    counts = onehot.sum(axis=0)                       # (k,)
+    sums = D @ onehot                                 # (n, k): sum_i->cluster
+    own = counts[inv]                                 # own-cluster sizes
+    rows = np.arange(n)
+    a = sums[rows, inv] / np.maximum(own - 1, 1)      # D[i,i]=0: self drops out
+    means = sums / counts[None, :]
+    means[rows, inv] = np.inf                         # b: nearest OTHER cluster
+    b = means.min(axis=1)
+    mx = np.maximum(a, b)
+    s = np.where((own > 1) & (mx > 0),
+                 (b - a) / np.where(mx > 0, mx, 1.0), 0.0)
     return float(np.mean(s))
 
 

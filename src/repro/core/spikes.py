@@ -21,16 +21,46 @@ def power_from_energy(energy_counter: np.ndarray, sample_dt_s: float) -> np.ndar
     return (de / sample_dt_s).astype(np.float64)
 
 
-def ema_filter(power: np.ndarray, alpha: float = 0.5) -> np.ndarray:
-    """P_filt(t) = alpha*P(t) + (1-alpha)*P_filt(t-1)   (paper uses 0.5)."""
-    out = np.empty_like(power, dtype=np.float64)
+def ema_filter(power: np.ndarray, alpha: float = 0.5,
+               backend: str | None = None) -> np.ndarray:
+    """P_filt(t) = alpha*P(t) + (1-alpha)*P_filt(t-1)   (paper uses 0.5).
+
+    The recurrence (filter state seeded with P(0)) is evaluated without a
+    per-sample Python loop by prefix-doubling: with w = 1-alpha and
+    c = alpha*P (c_0 = P_0, absorbing the seed state), the fixpoint of
+    ``out[s:] += w^s * out[:-s]`` for s = 1, 2, 4, ... is exactly
+    out_i = sum_j c_j w^(i-j) — O(n log n) vectorized NumPy ops, and the
+    loop short-circuits once w^s underflows to 0 (s ~ 50 for alpha = 0.5).
+
+    ``backend`` selects the implementation: ``"numpy"`` (float64 host path),
+    ``"pallas"`` (the ``repro.kernels.ema_scan`` TPU scan kernel, float32),
+    or ``None`` to autodetect — the kernel on a TPU backend, NumPy elsewhere.
+    """
+    power = np.asarray(power, np.float64)
+    if backend not in (None, "numpy", "pallas"):
+        raise ValueError(f"unknown ema backend {backend!r}")
     if len(power) == 0:
-        return out
-    acc = power[0]
-    for i, p in enumerate(power):
-        acc = alpha * p + (1 - alpha) * acc
-        out[i] = acc
+        return np.empty(0, np.float64)
+    if backend == "pallas" or (backend is None and _on_tpu()):
+        from repro.kernels.ops import ema_scan
+        return np.asarray(ema_scan(power, alpha=alpha), np.float64)
+    w = 1.0 - alpha
+    out = alpha * power
+    out[0] = power[0]
+    shift, decay = 1, w
+    while shift < len(out) and decay != 0.0:
+        out[shift:] += decay * out[:-shift]
+        shift *= 2
+        decay *= decay
     return out
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:      # pragma: no cover - jax is always present here
+        return False
 
 
 def trim_idle(power: np.ndarray, busy: np.ndarray) -> np.ndarray:

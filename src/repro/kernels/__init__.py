@@ -1,2 +1,3 @@
-from repro.kernels.ops import flash_attention, rmsnorm, spike_hist, ssm_scan
+from repro.kernels.ops import (ema_scan, flash_attention, rmsnorm, spike_hist,
+                               ssm_scan)
 from repro.kernels import ref

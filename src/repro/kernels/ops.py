@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ema_scan import ema_scan_pallas
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.spike_hist import spike_hist_pallas
@@ -55,6 +56,15 @@ def spike_hist(power: jax.Array, tdp: float | jax.Array, n_bins: int = 15,
     counts = spike_hist_pallas(rel, n_bins, lo=lo, hi=hi, interpret=interpret)
     total = jnp.sum(counts)
     return jnp.where(total > 0, counts / total, counts)
+
+
+@partial(jax.jit, static_argnames=("alpha", "interpret"))
+def ema_scan(power: jax.Array, alpha: float = 0.5,
+             interpret: bool | None = None) -> jax.Array:
+    """Power samples (W) -> EMA-filtered samples (paper's alpha=0.5 filter)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return ema_scan_pallas(power.astype(jnp.float32), alpha=alpha,
+                           interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("eps", "interpret"))

@@ -39,21 +39,26 @@ def _hist_kernel(r_ref, o_ref, *, n_bins: int, lo: float, hi: float):
 
 def spike_hist_pallas(rel_power: jax.Array, n_bins: int, lo: float = 0.5,
                       hi: float = 2.0, block_rows: int = 64,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """rel_power: (n,) f32 relative magnitudes -> (n_bins,) counts.
 
     n is padded to a (rows x 128) layout; padding uses -inf (never counted).
+    ``interpret=None`` autodetects: compiled on TPU, interpreter elsewhere.
     """
     assert n_bins <= _OUT_COLS
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = rel_power.shape[0]
     cols = 128
-    rows = -(-n // cols)
+    block_rows = min(block_rows, -(-n // cols))
+    # pad the row count up to a block multiple (padding is -inf, never
+    # counted) so every grid step runs a full requested block — strictly
+    # better than shrinking block_rows to a divisor of rows (the seed's
+    # decrement search, or math.gcd, which can degrade to 1-row blocks)
+    rows = -(-n // (cols * block_rows)) * block_rows
     pad = rows * cols - n
     r = jnp.pad(rel_power.astype(jnp.float32), (0, pad),
                 constant_values=-jnp.inf).reshape(rows, cols)
-    block_rows = min(block_rows, rows)
-    while rows % block_rows:
-        block_rows -= 1
     grid = (rows // block_rows,)
     kernel = functools.partial(_hist_kernel, n_bins=n_bins, lo=lo, hi=hi)
     out = pl.pallas_call(

@@ -5,6 +5,83 @@ import sys
 # XLA_FLAGS in-process; never globally here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+
+def _install_hypothesis_shim() -> None:
+    """Make ``from hypothesis import given, settings, strategies`` work in
+    containers without hypothesis installed.
+
+    The shim is a deliberately tiny stand-in: ``@given`` draws a fixed number
+    of pseudo-random examples from the strategies (deterministic seed, no
+    shrinking, no edge-case bias) — enough to keep the property tests
+    meaningful and the suite collectible.  When the real hypothesis is
+    importable it is always preferred.
+    """
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+
+    import types
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def floats(min_value=0.0, max_value=1.0):
+        return _Strategy(
+            lambda r: float(min_value + (max_value - min_value) * r.random()))
+
+    def integers(min_value=0, max_value=100):
+        return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: elements[int(r.integers(len(elements)))])
+
+    def lists(elements, min_size=0, max_size=10):
+        def draw(r):
+            size = int(r.integers(min_size, max_size + 1))
+            return [elements.draw(r) for _ in range(size)]
+        return _Strategy(draw)
+
+    def given(*strategies):
+        def deco(fn):
+            # zero-arg wrapper (not functools.wraps): the strategy parameters
+            # must not leak into the signature pytest inspects for fixtures
+            def wrapper():
+                rng = _np.random.default_rng(0)
+                for _ in range(getattr(fn, "_shim_max_examples", 20)):
+                    fn(*[s.draw(rng) for s in strategies])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__dict__.update(fn.__dict__)   # keep pytest marks
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = "pytest-time fallback shim (see tests/conftest.py)"
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for f in (floats, integers, sampled_from, lists):
+        setattr(st_mod, f.__name__, f)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+_install_hypothesis_shim()
+
 import jax
 import pytest
 
