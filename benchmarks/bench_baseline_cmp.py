@@ -9,15 +9,15 @@ import time
 import numpy as np
 
 from benchmarks.common import (RESULTS, emit, holdout_power_error,
-                               reference_library, unique_workloads)
-from repro.core import MinosClassifier
+                               reference_library, unique_library)
 from repro.core.baselines import mean_power_neighbor, util_only_neighbor
 
 
 def run() -> dict:
     t0 = time.time()
-    uniq = unique_workloads(reference_library())
-    clf = MinosClassifier(uniq)
+    uniq_lib = unique_library(reference_library())
+    uniq = uniq_lib.profiles
+    clf = uniq_lib.classifier()
     rows = []
     for target in uniq:
         nn_minos, _ = clf.power_neighbor(target)

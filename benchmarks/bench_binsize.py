@@ -8,16 +8,16 @@ import time
 
 import numpy as np
 
-from benchmarks.common import RESULTS, emit, reference_library, unique_workloads
-from repro.core import MinosClassifier
+from benchmarks.common import RESULTS, emit, reference_library, unique_library
 
 BIN_SIZES = (0.05, 0.1, 0.15, 0.2, 0.25, 0.5, 0.75)
 
 
 def run() -> dict:
     t0 = time.time()
-    uniq = unique_workloads(reference_library())
-    clf = MinosClassifier(uniq)
+    uniq_lib = unique_library(reference_library())
+    uniq = uniq_lib.profiles
+    clf = uniq_lib.classifier()
     errs = {}
     p90 = {r.name: r.p_quantile(90) for r in uniq}
     for c in BIN_SIZES:

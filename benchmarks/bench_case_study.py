@@ -18,15 +18,15 @@ import numpy as np
 from benchmarks.common import (RESULTS, degradation, emit, nearest_freq,
                                reference_library)
 from repro.analysis.hardware import FREQ_SWEEP
-from repro.core import MinosClassifier, select_optimal_freq
+from repro.core import select_optimal_freq
 from repro.core.algorithm1 import PERF_BOUND, POWER_BOUND, profiling_savings
 from repro.telemetry import build_holdout_profiles
 
 
 def run() -> dict:
     t0 = time.time()
-    refs = reference_library()
-    clf = MinosClassifier(refs)
+    lib = reference_library()
+    clf = lib.classifier()
     observed, truth = build_holdout_profiles(with_truth=True)
     truth_by_name = {t.name: t for t in truth}
 
@@ -34,8 +34,8 @@ def run() -> dict:
     for obs in observed:
         tru = truth_by_name[obs.name]
         sel = select_optimal_freq(obs, clf)
-        nn_pwr = next(r for r in refs if r.name == sel.power_neighbor)
-        nn_perf = next(r for r in refs if r.name == sel.util_neighbor)
+        nn_pwr = lib.get(sel.power_neighbor)
+        nn_perf = lib.get(sel.util_neighbor)
         # PowerCentric: does the chosen cap keep the target's true p90 under
         # 1.3x TDP?  error := observed p90 - bound (positive = violated)
         obs_p90 = tru.scaling[nearest_freq(tru, sel.f_pwr)].p90

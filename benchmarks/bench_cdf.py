@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import RESULTS, emit, reference_library
+from benchmarks.common import RESULTS, emit
 from repro.analysis.hardware import V5E
 from repro.core import spikes
 from repro.telemetry import TPUPowerModel, simulate

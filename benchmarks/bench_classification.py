@@ -9,7 +9,6 @@ import time
 import numpy as np
 
 from benchmarks.common import RESULTS, emit, reference_library
-from repro.core import MinosClassifier
 from repro.core.clustering import dendrogram_order
 
 
@@ -23,9 +22,10 @@ def _ascii_dendrogram(names, Z, labels) -> str:
 
 def run() -> dict:
     t0 = time.time()
-    refs = reference_library()
-    clf = MinosClassifier(refs)
-    names = [r.name for r in refs]
+    lib = reference_library()
+    refs = lib.profiles
+    clf = lib.classifier()
+    names = lib.names
 
     Z = clf.power_linkage()
     power_labels = clf.power_classes(k=3)

@@ -14,7 +14,7 @@ from repro.analysis.hardware import FREQ_SWEEP
 
 def run() -> dict:
     t0 = time.time()
-    refs = reference_library()
+    refs = reference_library().profiles
     rows = {}
     for r in refs:
         base = r.scaling[max(r.scaling)].exec_time

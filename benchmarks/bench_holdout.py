@@ -11,15 +11,14 @@ import numpy as np
 
 from benchmarks.common import (RESULTS, emit, holdout_neighbors,
                                holdout_perf_error, holdout_power_error,
-                               reference_library, unique_workloads)
-from repro.core import MinosClassifier
+                               reference_library, unique_library)
 
 
 def run() -> dict:
     t0 = time.time()
-    refs = reference_library()
-    uniq = unique_workloads(refs)
-    clf = MinosClassifier(uniq)
+    uniq_lib = unique_library(reference_library())
+    uniq = uniq_lib.profiles
+    clf = uniq_lib.classifier()
     pwr_nn, util_nn = holdout_neighbors(clf, uniq)
     rows = []
     for target, (nn_pwr, d_pwr), (nn_perf, d_perf) in zip(uniq, pwr_nn, util_nn):

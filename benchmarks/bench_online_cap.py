@@ -1,0 +1,155 @@
+"""Online capping convergence: how much of a profiling trace does the
+pipeline need before its cap decision matches the full-profile one?
+
+For every zoo workload, the single uncapped profiling run is streamed
+through a ``ProfileBuilder`` (hold-one-out against the shipped reference
+library); at each trace-fraction checkpoint the partial profile is pushed
+through Algorithm 1 and the chosen cap is compared with the decision from
+the completed profile.  A second track runs the ``OnlineCapController``'s
+confidence gate on the same stream, recording where it would have stopped
+profiling and whether that early call was right.
+
+Emits one ``emit()`` row and writes ``results/online_cap.json``:
+  * ``agreement_curve`` — fraction-of-trace -> share of workloads whose
+    online cap equals the full-profile cap (both objectives);
+  * ``agreement_at_half`` — the headline: >= 0.9 expected at 50% of trace;
+  * per-workload convergence fractions and controller early-stop stats.
+
+``--smoke`` runs a micro-zoo configuration for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, reference_library
+from repro.core.algorithm1 import select_optimal_freq
+from repro.pipeline import (OnlineCapController, ProfileBuilder,
+                            ReferenceLibrary, stream_profile_workload)
+from repro.telemetry import TPUPowerModel, stream_telemetry
+from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
+                                           micro_spmv_compute,
+                                           micro_spmv_memory, micro_stencil)
+from repro.telemetry.workloads import reference_streams
+
+FRACTIONS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0)
+
+
+def _caps(sel) -> dict:
+    return {"powercentric": sel.f_pwr, "perfcentric": sel.f_perf}
+
+
+def run(smoke: bool = False) -> dict:
+    t0 = time.time()
+    model = TPUPowerModel()
+    tdp = model.spec.tdp_w
+    if smoke:
+        streams = [micro_gemm(), micro_spmv_memory(), micro_spmv_compute(),
+                   micro_idle_burst(), micro_stencil()]
+        lib = ReferenceLibrary(
+            stream_profile_workload(s, model, (0.6, 0.8, 1.0), tdp, seed=i,
+                                    target_duration=1.0)
+            for i, s in enumerate(streams))
+        target_duration = 2.0
+    else:
+        streams = reference_streams()
+        lib = reference_library()
+        target_duration = 4.0
+    clf = lib.classifier()
+
+    rows = []
+    agree = {obj: {f: 0 for f in FRACTIONS}
+             for obj in ("powercentric", "perfcentric")}
+    for i, stream in enumerate(streams):
+        meta, chunks = stream_telemetry(stream, 1.0, model, seed=1000 + i,
+                                        target_duration=target_duration)
+        builder = ProfileBuilder(meta, tdp)
+        # the controller's confidence gate rides along on the same stream
+        controller = OnlineCapController(clf, objective="powercentric",
+                                         min_confidence=0.2)
+        gate_decision = None
+        partial = {}
+        next_f = 0
+        for chunk in chunks:
+            builder.ingest(chunk)
+            if gate_decision is None:
+                gate_decision = controller.observe(builder)
+            while next_f < len(FRACTIONS) and \
+                    builder.fraction >= FRACTIONS[next_f] - 1e-12:
+                sel = select_optimal_freq(builder.snapshot(), clf)
+                partial[FRACTIONS[next_f]] = _caps(sel)
+                next_f += 1
+        final_sel = select_optimal_freq(builder.finalize(), clf)
+        final = _caps(final_sel)
+        for f in FRACTIONS[next_f:]:
+            partial[f] = final
+        conv = {}
+        for obj in agree:
+            # convergence: earliest checkpoint from which the online cap
+            # matches the full-profile cap at every later checkpoint too
+            conv_f = 1.0
+            for f in reversed(FRACTIONS):
+                if partial[f][obj] != final[obj]:
+                    break
+                conv_f = f
+            conv[obj] = conv_f
+            for f in FRACTIONS:
+                agree[obj][f] += partial[f][obj] == final[obj]
+        rows.append({
+            "target": meta.name,
+            "final_cap": final,
+            "converged_at": conv,
+            "gate_fraction": None if gate_decision is None
+            else round(gate_decision.fraction, 3),
+            "gate_confidence": None if gate_decision is None
+            else round(gate_decision.confidence, 3),
+            "gate_cap_matches": None if gate_decision is None
+            else gate_decision.cap == final["powercentric"],
+        })
+
+    n = len(streams)
+    curve = {obj: {str(f): round(agree[obj][f] / n, 4) for f in FRACTIONS}
+             for obj in agree}
+    at_half = {obj: agree[obj][0.5] / n for obj in agree}
+    gated = [r for r in rows if r["gate_fraction"] is not None]
+    gate_stats = {
+        "decided_early": len(gated),
+        "n_targets": n,
+        "mean_fraction": round(float(np.mean(
+            [r["gate_fraction"] for r in gated])), 3) if gated else None,
+        "cap_match_rate": round(float(np.mean(
+            [r["gate_cap_matches"] for r in gated])), 3) if gated else None,
+    }
+    out = {
+        "config": {"smoke": smoke, "n_targets": n,
+                   "target_duration_s": target_duration},
+        "agreement_curve": curve,
+        "agreement_at_half": {k: round(v, 4) for k, v in at_half.items()},
+        "meets_90pct_at_half": all(v >= 0.9 for v in at_half.values()),
+        "controller_gate": gate_stats,
+        "per_workload": rows,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "online_cap.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    emit("online_cap_convergence", (time.time() - t0) * 1e6,
+         f"agree@50%={at_half['powercentric']:.2f}/"
+         f"{at_half['perfcentric']:.2f};early={gate_stats['decided_early']}"
+         f"/{n}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="micro-zoo configuration for CI")
+    args = ap.parse_args()
+    print(json.dumps(run(smoke=args.smoke), indent=1))
+
+
+if __name__ == "__main__":
+    main()

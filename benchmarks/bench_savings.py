@@ -15,7 +15,7 @@ from repro.core.algorithm1 import profiling_savings
 
 def run() -> dict:
     t0 = time.time()
-    refs = reference_library()
+    refs = reference_library().profiles
     rows = {r.name: round(profiling_savings(r, list(FREQ_SWEEP)), 4)
             for r in refs}
     mean = float(np.mean(list(rows.values())))

@@ -1,37 +1,40 @@
 """Shared benchmark infrastructure: the cached reference library and the
-hold-one-out protocol helpers (paper §7.2)."""
+hold-one-out protocol helpers (paper §7.2).
+
+``reference_library`` returns a ``repro.pipeline.ReferenceLibrary``: on a
+warm start the fingerprinted spike-matrix cache under
+``results/reference_store/`` is adopted, so ``lib.classifier()`` skips
+re-histogramming all 28 reference traces at every benchmark process start.
+"""
 from __future__ import annotations
 
 import os
 import time
 
-import numpy as np
-
-from repro.analysis.hardware import FREQ_SWEEP
 from repro.core import MinosClassifier, WorkloadProfile
 from repro.core.algorithm1 import (cap_perf_centric, cap_power_centric,
                                    POWER_BOUND)
-from repro.core.reference_store import load_profiles, save_profiles
-from repro.telemetry import TPUPowerModel, build_reference_set
+from repro.pipeline import ReferenceLibrary, build_reference_library
+from repro.telemetry import TPUPowerModel
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RESULTS = os.path.join(REPO, "results")
 STORE = os.path.join(RESULTS, "reference_store")
 
 
-def reference_library(rebuild: bool = False) -> list[WorkloadProfile]:
+def reference_library(rebuild: bool = False) -> ReferenceLibrary:
     os.makedirs(RESULTS, exist_ok=True)
     if not rebuild and os.path.exists(os.path.join(STORE, "profiles.json")):
-        return load_profiles(STORE)
+        return ReferenceLibrary.load(STORE)
     t0 = time.time()
-    refs = build_reference_set(TPUPowerModel(), target_duration=3.0)
-    save_profiles(refs, STORE)
-    print(f"# built reference library: {len(refs)} profiles "
+    lib = build_reference_library(TPUPowerModel(), target_duration=3.0)
+    lib.save(STORE)
+    print(f"# built reference library: {len(lib)} profiles "
           f"in {time.time() - t0:.1f}s")
-    return refs
+    return lib
 
 
-def unique_workloads(refs: list[WorkloadProfile]) -> list[WorkloadProfile]:
+def unique_workloads(refs) -> list[WorkloadProfile]:
     """One profile per workload for hold-one-out (paper: the largest input;
     here: the train cell for each arch, plus every microbenchmark)."""
     out = []
@@ -44,6 +47,13 @@ def unique_workloads(refs: list[WorkloadProfile]) -> list[WorkloadProfile]:
             seen.add(arch)
         out.append(r)
     return out
+
+
+def unique_library(lib: ReferenceLibrary) -> ReferenceLibrary:
+    """The hold-one-out subset as a sub-library: cached spike-matrix rows are
+    carried over, so ``.classifier()`` stays warm-started."""
+    keep = {r.name for r in unique_workloads(lib.profiles)}
+    return lib.subset(lambda p: p.name in keep)
 
 
 def holdout_neighbors(clf: MinosClassifier, targets: list[WorkloadProfile],

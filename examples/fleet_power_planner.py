@@ -1,24 +1,31 @@
 """Fleet what-if: pack a job mix into a pod power budget using Minos
-predictions (the paper's POLCA-style oversubscription use case, §4.3).
+predictions (the paper's POLCA-style oversubscription use case, §4.3) — with
+jobs admitted one at a time through the online pipeline.
 
     PYTHONPATH=src python examples/fleet_power_planner.py
-"""
-import numpy as np
 
+Each queued job streams its single uncapped profiling run through
+``OnlineCapController``; as soon as the controller is confident it issues the
+cap and the pod is re-packed (deterministic first-fit-decreasing) around the
+new job's predicted p90 power.
+"""
 from benchmarks.common import reference_library
 from repro.analysis.hardware import V5E
-from repro.core import MinosClassifier
+from repro.pipeline import OnlineCapController, ProfileBuilder
 from repro.sched import PowerAwareScheduler
-from repro.telemetry import TPUPowerModel, profile_once
+from repro.telemetry import TPUPowerModel, stream_telemetry
 from repro.telemetry.workloads import holdout_streams, reference_streams
 
 
 def main() -> None:
-    refs = reference_library()
-    clf = MinosClassifier(refs)
-    sched = PowerAwareScheduler(clf, tdp_w=V5E.tdp_w, objective="powercentric")
+    lib = reference_library()
+    clf = lib.classifier()          # warm-started from the on-disk cache
+    sched = PowerAwareScheduler(clf, tdp_w=V5E.tdp_w,
+                                objective="powercentric")
+    controller = OnlineCapController(clf, objective="powercentric",
+                                     min_confidence=0.2)
 
-    # a queue of jobs: profiles from one uncapped run each
+    # a queue of jobs: each streams one uncapped profiling run
     model = TPUPowerModel()
     streams = {s.name: s for s in reference_streams() + holdout_streams()}
     queue = [
@@ -28,18 +35,39 @@ def main() -> None:
         ("granite-moe-3b-a800m:decode_32k", 64),
         ("lsms-like", 32),
     ]
-    jobs = [(profile_once(streams[name], model, V5E.tdp_w, seed=i), chips)
-            for i, (name, chips) in enumerate(queue)]
-    jobs = [(p, c) for (p, c) in jobs]
-
     total_chips = sum(c for _, c in queue)
     nameplate = total_chips * V5E.tdp_w
     budget = 0.75 * nameplate   # an oversubscribed pod
     print(f"pod: {total_chips} chips, nameplate {nameplate/1e3:.0f} kW, "
           f"budget {budget/1e3:.0f} kW (75% oversubscription)")
 
-    res = sched.schedule(jobs, budget_w=budget)
-    print(f"\nplaced {len(res.placed)} jobs, deferred {len(res.deferred)}:")
+    admitted = []
+    res = None
+    for i, (name, chips) in enumerate(queue):
+        meta, chunks = stream_telemetry(streams[name], 1.0, model, seed=i)
+        builder = ProfileBuilder(meta, V5E.tdp_w)
+        decision = None
+        for chunk in chunks:
+            builder.ingest(chunk)
+            decision = controller.observe(builder)
+            if decision is not None:
+                break
+        if decision is None:
+            decision = controller.finalize(builder)
+        profile = builder.snapshot() if decision.early \
+            else builder.finalize()
+        admitted.append((profile, chips))
+        # cap decided -> re-pack the pod around the new power picture
+        res = controller.repack(sched, admitted, budget_w=budget)
+        when = f"{decision.fraction:4.0%} of trace" if decision.early \
+            else "full trace"
+        print(f"  + {name:36s} cap=f{decision.cap:.2f} ({when})  "
+              f"-> {len(res.placed)} placed / {len(res.deferred)} deferred, "
+              f"{res.planned_power_w/1e3:5.0f} kW planned")
+
+    # res already holds the re-pack from the last admission
+    print(f"\nfinal packing: {len(res.placed)} jobs placed, "
+          f"{len(res.deferred)} deferred:")
     for j in res.placed:
         print(f"  {j.name:36s} chips={j.chips:4d} cap=f{j.cap:.2f} "
               f"p90={j.predicted_p90_w:5.0f} W/chip "

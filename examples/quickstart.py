@@ -1,14 +1,20 @@
 """Quickstart: classify a never-before-seen workload and pick its frequency
-cap with Minos — end to end in under a minute on CPU.
+cap with the Minos streaming pipeline — end to end in under a minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
 
-from repro.analysis.hardware import FREQ_SWEEP
-from repro.core import MinosClassifier, select_optimal_freq
+The pipeline front door, in order:
+  1. ``stream_profile_workload``  -> a small versioned ``ReferenceLibrary``
+  2. ``stream_telemetry`` + ``ProfileBuilder``  -> the new workload's one
+     low-cost profile, ingested chunk by chunk
+  3. ``OnlineCapController``  -> Algorithm 1 on the *partial* profile, with
+     the cap issued as soon as the distance-margin confidence clears
+"""
+from repro.pipeline import (OnlineCapController, ProfileBuilder,
+                            ReferenceLibrary, stream_profile_workload)
 from repro.core.algorithm1 import profiling_savings
-from repro.telemetry import TPUPowerModel, profile_once, profile_workload
+from repro.sched import SimActuator
+from repro.telemetry import TPUPowerModel, profile_workload, stream_telemetry
 from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
                                            micro_spmv_compute,
                                            micro_spmv_memory, micro_stencil,
@@ -20,31 +26,56 @@ def main() -> None:
     tdp = model.spec.tdp_w
     freqs = (0.6, 0.7, 0.8, 0.9, 1.0)
 
-    # 1. reference library: a few profiled-once-per-frequency workloads
+    # 1. reference library: a few workloads profiled across the freq sweep,
+    #    streamed through the incremental ProfileBuilder
     print("building a small reference library (5 workloads x 5 freqs)...")
-    refs = [profile_workload(s, model, freqs, tdp, seed=i, target_duration=1.0)
-            for i, s in enumerate([micro_gemm(), micro_spmv_memory(),
-                                   micro_spmv_compute(), micro_idle_burst(),
-                                   micro_stencil()])]
-    clf = MinosClassifier(refs)
+    lib = ReferenceLibrary(
+        stream_profile_workload(s, model, freqs, tdp, seed=i,
+                                target_duration=1.0)
+        for i, s in enumerate([micro_gemm(), micro_spmv_memory(),
+                               micro_spmv_compute(), micro_idle_burst(),
+                               micro_stencil()]))
+    print(f"  library v{lib.version}: {', '.join(lib.names)}")
 
-    # 2. a NEW workload arrives: profile it ONCE, at the default clock
-    target = profile_once(micro_vector_search(), model, tdp, seed=99)
-    print(f"\nnew workload: {target.name}")
+    # 2. a NEW workload arrives: stream its ONE low-cost profiling run
+    #    through the builder, watching for an early cap decision
+    actuator = SimActuator()
+    controller = OnlineCapController(lib, objective="powercentric",
+                                     actuator=actuator, min_confidence=0.2)
+    meta, chunks = stream_telemetry(micro_vector_search(), 1.0, model,
+                                    seed=99)
+    builder = ProfileBuilder(meta, tdp)
+    decision = None
+    for chunk in chunks:
+        builder.ingest(chunk)
+        decision = controller.observe(builder)
+        if decision is not None:
+            break
+    if decision is None:
+        decision = controller.finalize(builder)
+    target = builder.snapshot() if decision.early else builder.finalize()
+    print(f"\nnew workload: {meta.name}")
     print(f"  p90 power     : {target.p_quantile(90):.2f} x TDP")
     print(f"  mxu/hbm util  : {target.sm_util:.2f} / {target.dram_util:.2f}")
 
-    # 3. Algorithm 1: pick the frequency cap from the nearest neighbors
-    sel = select_optimal_freq(target, clf)
-    print(f"\nAlgorithm 1 selection:")
+    # 3. the online Algorithm 1 decision
+    sel = decision.selection
+    when = (f"after {decision.fraction:.0%} of the trace"
+            if decision.early else "at stream end")
+    print(f"\nonline cap decision ({when}, "
+          f"confidence {decision.confidence:.2f}):")
     print(f"  bin size        : {sel.bin_size}")
-    print(f"  power neighbor  : {sel.power_neighbor} (cosine d={sel.power_distance:.3f})")
-    print(f"  perf neighbor   : {sel.util_neighbor} (euclid d={sel.util_distance:.3f})")
+    print(f"  power neighbor  : {sel.power_neighbor} "
+          f"(cosine d={sel.power_distance:.3f})")
+    print(f"  perf neighbor   : {sel.util_neighbor} "
+          f"(euclid d={sel.util_distance:.3f})")
     print(f"  PowerCentric cap: f={sel.f_pwr:.2f}  (p90 spikes < 1.3 x TDP)")
     print(f"  PerfCentric cap : f={sel.f_perf:.2f} (perf loss < 5%)")
+    print(f"  actuator now at : f={actuator.get_cap():.2f}")
 
     # 4. validate against ground truth the classifier never saw
-    truth = profile_workload(micro_vector_search(), model, freqs, tdp, seed=99)
+    truth = profile_workload(micro_vector_search(), model, freqs, tdp,
+                             seed=99)
     obs = truth.scaling[sel.f_pwr].p90
     print(f"\nvalidation (simulator ground truth):")
     print(f"  observed p90 at cap {sel.f_pwr:.2f}: {obs:.2f} x TDP "

@@ -100,7 +100,12 @@ class MinosClassifier:
     ``power_neighbor`` / ``util_neighbor`` wrappers are one-target batches.
     """
 
-    def __init__(self, references: list[WorkloadProfile], bin_size: float = 0.1):
+    def __init__(self, references: list[WorkloadProfile], bin_size: float = 0.1,
+                 spike_cache: dict[float, np.ndarray] | None = None):
+        """``spike_cache`` warm-starts the per-bin-size spike matrices (e.g.
+        from ``pipeline.ReferenceLibrary``'s persisted cache) so construction
+        skips re-histogramming every reference trace; each matrix must be
+        (n_refs, num_bins(c)) and row-aligned with ``references``."""
         if not references:
             raise ValueError("empty reference set")
         self.references = list(references)
@@ -108,6 +113,14 @@ class MinosClassifier:
         self._ref_names = np.array([r.name for r in self.references])
         self._spike_cache: dict[float, np.ndarray] = {}
         self._util_cache: np.ndarray | None = None
+        for c, M in (spike_cache or {}).items():
+            c = self._validate_bin(c)
+            M = np.asarray(M, np.float64)
+            want = (len(self.references), spikes.num_bins(c))
+            if M.shape != want:
+                raise ValueError(
+                    f"spike_cache[{c}] has shape {M.shape}, expected {want}")
+            self._spike_cache[c] = M
 
     @staticmethod
     def _validate_bin(c) -> float:
@@ -146,18 +159,44 @@ class MinosClassifier:
         by workload name plus the optional shared ``exclude`` name.  Raises
         ``ValueError`` if some target has every reference excluded.
         """
-        c = self._resolve_bin(bin_size)
-        if self._is_reference_batch(targets):
-            T = self.spike_matrix(c)           # hold-one-out: reuse the cache
-        else:
-            T = np.stack([t.spike_vec(c) for t in targets])
-        D = _cosine_distances(T, self.spike_matrix(c))
+        D = self._power_distances(targets, bin_size)
         return self._pick(D, targets, exclude)
 
     def power_neighbor(self, target: WorkloadProfile,
                        bin_size: float | None = None,
                        exclude: str | None = None) -> tuple[WorkloadProfile, float]:
         return self.power_neighbors([target], bin_size, exclude)[0]
+
+    def power_top2(self, targets: list[WorkloadProfile],
+                   bin_size: float | None = None,
+                   exclude: str | None = None
+                   ) -> list[tuple[WorkloadProfile, float, float]]:
+        """Like ``power_neighbors`` but with the runner-up distance: returns
+        ``(best_ref, d_best, d_second)`` per target.  ``d_second`` is ``inf``
+        when only one reference is eligible — the margin signal the online
+        cap controller turns into a confidence score."""
+        D = self._mask(self._power_distances(targets, bin_size), targets,
+                       exclude)
+        idx = np.argmin(D, axis=1)
+        best = D[np.arange(len(targets)), idx]
+        self._check_eligible(best, targets, exclude)
+        if D.shape[1] > 1:
+            second = np.partition(D, 1, axis=1)[:, 1]
+        else:
+            second = np.full(len(targets), np.inf)
+        return [(self.references[i], float(d1), float(d2))
+                for i, d1, d2 in zip(idx, best, second)]
+
+    def _power_distances(self, targets: list[WorkloadProfile],
+                         bin_size: float | None) -> np.ndarray:
+        """(n_targets, n_refs) cosine distances on spike vectors, reusing the
+        cached reference matrix on both sides for hold-one-out batches."""
+        c = self._resolve_bin(bin_size)
+        if self._is_reference_batch(targets):
+            T = self.spike_matrix(c)           # hold-one-out: reuse the cache
+        else:
+            T = np.stack([t.spike_vec(c) for t in targets])
+        return _cosine_distances(T, self.spike_matrix(c))
 
     # -- utilization side -------------------------------------------------
     def util_matrix(self) -> np.ndarray:
@@ -201,20 +240,29 @@ class MinosClassifier:
         return len(targets) == len(self.references) and \
             all(t is r for t, r in zip(targets, self.references))
 
-    def _pick(self, D: np.ndarray, targets: list[WorkloadProfile],
-              exclude: str | None) -> list[tuple[WorkloadProfile, float]]:
+    def _mask(self, D: np.ndarray, targets: list[WorkloadProfile],
+              exclude: str | None) -> np.ndarray:
         masked = self._ref_names[None, :] == \
             np.array([t.name for t in targets], dtype=object)[:, None]
         if exclude is not None:
             masked |= self._ref_names[None, :] == exclude
-        D = np.where(masked, np.inf, D)
-        idx = np.argmin(D, axis=1)
-        best = D[np.arange(len(targets)), idx]
+        return np.where(masked, np.inf, D)
+
+    @staticmethod
+    def _check_eligible(best: np.ndarray, targets: list[WorkloadProfile],
+                        exclude: str | None) -> None:
         if np.any(np.isinf(best)):
             bad = targets[int(np.nonzero(np.isinf(best))[0][0])].name
             raise ValueError(
                 f"no eligible reference for target {bad!r}: every reference "
                 f"is excluded (self-match or exclude={exclude!r})")
+
+    def _pick(self, D: np.ndarray, targets: list[WorkloadProfile],
+              exclude: str | None) -> list[tuple[WorkloadProfile, float]]:
+        D = self._mask(D, targets, exclude)
+        idx = np.argmin(D, axis=1)
+        best = D[np.arange(len(targets)), idx]
+        self._check_eligible(best, targets, exclude)
         return [(self.references[i], float(d)) for i, d in zip(idx, best)]
 
 

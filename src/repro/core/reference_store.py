@@ -1,64 +1,34 @@
-"""Persistence for the Minos reference library (profiles + scaling data).
+"""DEPRECATED persistence shim — use ``repro.pipeline.ReferenceLibrary``.
 
-The framework ships a reference store built by `benchmarks/` from the
-workload zoo; the launcher loads it to pick frequency caps for new jobs
-(``launch/train.py --minos-cap``).
+The store's flat ``save_profiles``/``load_profiles`` functions have been
+folded into the versioned ``ReferenceLibrary`` (which additionally persists
+the fingerprinted spike-matrix cache for classifier warm starts and keeps
+traces float64 so reloads are bit-exact).  These wrappers delegate there and
+emit ``DeprecationWarning``; directories written by either API load with
+either API — the library's reader tolerates stores without the
+``library.json``/``spike_cache.npz`` sidecars (including pre-PR-2 float32
+trace archives).
 """
 from __future__ import annotations
 
-import json
-import os
+import warnings
 
-import numpy as np
-
-from repro.core.classify import FreqPoint, WorkloadProfile
+from repro.core.classify import WorkloadProfile
 
 
 def save_profiles(profiles: list[WorkloadProfile], directory: str) -> None:
-    os.makedirs(directory, exist_ok=True)
-    meta = {}
-    arrays = {}
-    for i, p in enumerate(profiles):
-        key = f"trace_{i}"
-        arrays[key] = np.asarray(p.power_trace, np.float32)
-        meta[p.name] = {
-            "trace_key": key,
-            "tdp": p.tdp,
-            "sm_util": p.sm_util,
-            "dram_util": p.dram_util,
-            "exec_time": p.exec_time,
-            "domain": p.domain,
-            "scaling": {
-                str(f): {
-                    "freq": fp.freq, "p90": fp.p90, "p95": fp.p95,
-                    "p99": fp.p99, "mean_power": fp.mean_power,
-                    "exec_time": fp.exec_time,
-                }
-                for f, fp in p.scaling.items()
-            },
-        }
-    np.savez_compressed(os.path.join(directory, "traces.npz"), **arrays)
-    with open(os.path.join(directory, "profiles.json"), "w") as f:
-        json.dump(meta, f, indent=1)
+    warnings.warn(
+        "repro.core.reference_store.save_profiles is deprecated; use "
+        "repro.pipeline.ReferenceLibrary(profiles).save(directory)",
+        DeprecationWarning, stacklevel=2)
+    from repro.pipeline.library import ReferenceLibrary
+    ReferenceLibrary(profiles).save(directory)
 
 
 def load_profiles(directory: str) -> list[WorkloadProfile]:
-    with open(os.path.join(directory, "profiles.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(directory, "traces.npz"))
-    out = []
-    for name, m in meta.items():
-        scaling = {
-            float(f): FreqPoint(**fp) for f, fp in m["scaling"].items()
-        }
-        out.append(WorkloadProfile(
-            name=name,
-            tdp=m["tdp"],
-            power_trace=data[m["trace_key"]].astype(np.float64),
-            sm_util=m["sm_util"],
-            dram_util=m["dram_util"],
-            exec_time=m["exec_time"],
-            scaling=scaling,
-            domain=m.get("domain", ""),
-        ))
-    return out
+    warnings.warn(
+        "repro.core.reference_store.load_profiles is deprecated; use "
+        "repro.pipeline.ReferenceLibrary.load(directory)",
+        DeprecationWarning, stacklevel=2)
+    from repro.pipeline.library import ReferenceLibrary
+    return ReferenceLibrary.load(directory).profiles

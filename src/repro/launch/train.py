@@ -3,50 +3,56 @@
     PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \\
         --steps 20 --minos-cap powercentric
 
-With ``--minos-cap``, the launcher (1) builds/loads the Minos reference
-library, (2) profiles this job once at the uncapped clock (the paper's
-low-cost profile — here via the telemetry simulator attached to this arch's
-kernel stream), (3) runs Algorithm 1 and applies the selected cap through the
-DVFS actuator before training starts.
+With ``--minos-cap``, the launcher (1) loads (or builds once) the versioned
+Minos ``ReferenceLibrary`` — warm-starting the classifier from its persisted
+spike-matrix cache, (2) *streams* this job's one low-cost profiling run
+through the ``ProfileBuilder``/``OnlineCapController`` pipeline, capping
+through the DVFS actuator as soon as the partial-profile classification is
+confident (often well before the profile run would have finished), and only
+then starts training.
 """
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 
 from repro.configs import ARCHS, SHAPES, RunConfig
 from repro.configs.base import ShapeConfig
-from repro.core import MinosClassifier, select_optimal_freq
-from repro.core.reference_store import load_profiles, save_profiles
 from repro.models.common import SMOKE_TOPO, Topo
+from repro.pipeline import (OnlineCapController, ReferenceLibrary,
+                            build_reference_library)
 from repro.sched import SimActuator
-from repro.telemetry import TPUPowerModel, build_reference_set, profile_once
+from repro.telemetry import TPUPowerModel, stream_telemetry
 from repro.telemetry.kernel_stream import build_stream
 from repro.train import Trainer
 
 
-def minos_select_cap(arch: str, shape, objective: str, store_dir: str) -> float:
+def minos_select_cap(arch: str, shape, objective: str, store_dir: str,
+                     actuator: SimActuator | None = None) -> float:
     model = TPUPowerModel()
-    if os.path.isdir(store_dir) and os.path.exists(
-            os.path.join(store_dir, "profiles.json")):
-        refs = load_profiles(store_dir)
-    else:
+
+    def build():
         print("[minos] building reference library (one-time)...")
-        refs = build_reference_set(model, target_duration=2.0)
-        save_profiles(refs, store_dir)
-    refs = [r for r in refs if not r.name.startswith(arch)]
-    clf = MinosClassifier(refs)
+        return build_reference_library(model, target_duration=2.0).profiles
+
+    lib = ReferenceLibrary.load_or_build(store_dir, build)
+    # hold this arch out of its own reference set
+    lib = lib.subset(lambda r: not r.name.startswith(arch))
+    controller = OnlineCapController(lib, objective=objective,
+                                     actuator=actuator)
     stream = build_stream(ARCHS[arch], shape)
-    target = profile_once(stream, model, model.spec.tdp_w)
-    sel = select_optimal_freq(target, clf)
-    cap = sel.cap(objective)
-    print(f"[minos] target={target.name} bin={sel.bin_size} "
+    meta, chunks = stream_telemetry(stream, 1.0, model)
+    decision = controller.run(meta, chunks, model.spec.tdp_w)
+    sel = decision.selection
+    how = "early, from partial profile" if decision.early else "full profile"
+    print(f"[minos] target={decision.target} bin={sel.bin_size} "
           f"pwr_nn={sel.power_neighbor} (d={sel.power_distance:.3f}) "
           f"perf_nn={sel.util_neighbor} (d={sel.util_distance:.2f}) "
-          f"-> cap={cap:.2f} ({objective})")
-    return cap
+          f"-> cap={decision.cap:.2f} ({objective}; {how} at "
+          f"{decision.fraction:.0%} of the trace, "
+          f"confidence {decision.confidence:.2f})")
+    return decision.cap
 
 
 def main() -> None:
@@ -68,9 +74,8 @@ def main() -> None:
     shape = SHAPES[args.shape]
     actuator = SimActuator()
     if args.minos_cap:
-        cap = minos_select_cap(args.arch, shape, args.minos_cap,
-                               args.minos_store)
-        actuator.set_cap(cap)
+        minos_select_cap(args.arch, shape, args.minos_cap,
+                         args.minos_store, actuator=actuator)
 
     if args.smoke:
         cfg = cfg.reduced()

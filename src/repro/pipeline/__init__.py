@@ -1,0 +1,20 @@
+"""Streaming profiling pipeline — the front door of the Minos repro.
+
+Three layers, replacing the copy-pasted profile->classify->cap glue:
+
+  * ``ProfileBuilder`` (``builder``) — incremental ingestion of
+    ``TelemetryChunk``s; partial ``WorkloadProfile`` at any point, batch
+    equivalence at the end.
+  * ``ReferenceLibrary`` (``library``) — versioned reference set with
+    incremental add/remove, fingerprinted on-disk spike-matrix cache
+    (classifier warm start), and cluster-based dedup.
+  * ``OnlineCapController`` (``online``) — classify partial profiles
+    mid-run with a distance-margin confidence and actuate frequency caps
+    early, re-packing the pod through ``PowerAwareScheduler``.
+"""
+from repro.pipeline.builder import (DEFAULT_BIN_SIZES, PartialProfile,
+                                    ProfileBuilder, stream_profile_once,
+                                    stream_profile_workload)
+from repro.pipeline.library import ReferenceLibrary, build_reference_library
+from repro.pipeline.online import (CapDecision, OnlineCapController,
+                                   classify_with_margin)

@@ -1,0 +1,374 @@
+"""Incremental profile construction from streamed telemetry chunks.
+
+``ProfileBuilder`` is the streaming half of the Minos profiling pipeline: it
+ingests ``TelemetryChunk``s (cumulative energy/busy counter readings, the
+exact thing a telemetry daemon polls) and maintains, incrementally,
+
+  * the running energy/busy **prefix state** — the last counter readings,
+    differentiated against each new chunk to recover per-sample power and
+    busy flags;
+  * the **EMA filter tail** — filtered samples are produced through
+    fixed-position blocks (prefix-doubling within a block, carried filter
+    state between blocks), so the output is *bit-for-bit independent of how
+    the stream was chunked*;
+  * the **idle-trim frontier** — samples before the first busy reading are
+    dropped, samples after the last busy reading so far are held in a
+    pending tail and only committed when a later busy sample arrives
+    (matching the batch ``trim_idle`` head/tail semantics on every prefix);
+  * **per-bin-size spike histograms** over the committed samples, so partial
+    spike vectors are O(bins) queries instead of trace rescans.
+
+``snapshot()`` emits a valid partial ``WorkloadProfile`` at any point;
+``finalize()`` flushes everything and emits the completed profile.  A
+full-trace build matches the batch ``profile_workload``/``simulate`` path at
+1e-9 (golden tests in ``tests/test_pipeline.py``), and any chunking of the
+same stream produces bit-identical spike vectors (hypothesis property test).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import spikes
+from repro.core.classify import FreqPoint, WorkloadProfile
+from repro.telemetry.simulator import TelemetryChunk, TraceMeta
+
+DEFAULT_BIN_SIZES = (0.05, 0.1, 0.15, 0.2, 0.25, 0.5)
+EMA_BLOCK = 256
+
+
+@dataclass
+class PartialProfile(WorkloadProfile):
+    """A ``WorkloadProfile`` emitted mid-stream, annotated with progress."""
+    fraction: float = 1.0        # fraction of the expected trace ingested
+    n_samples: int = 0           # raw samples ingested so far
+    complete: bool = False       # True only for finalize() output
+
+    def spike_vec(self, bin_size: float) -> np.ndarray:
+        # the online path hits the same snapshot at the same bin size several
+        # times (choose_bin_size sweep -> final neighbor -> margin query);
+        # the trace is immutable once emitted, so memoize per bin size
+        cache = self.__dict__.setdefault("_spike_memo", {})
+        c = float(bin_size)
+        if c not in cache:
+            cache[c] = super().spike_vec(c)
+        return cache[c]
+
+
+class _BlockedEMA:
+    """EMA filter whose output does not depend on ingest chunk boundaries.
+
+    The recurrence out_i = alpha*p_i + (1-alpha)*out_{i-1} is evaluated with
+    the same prefix-doubling trick as ``spikes.ema_filter``, but over blocks
+    at *fixed absolute positions* (multiples of ``block`` from trace start),
+    seeding each block with the carried filter state: c_0 absorbs
+    w * out_{-1}.  Because block boundaries are a function of the sample
+    index alone, any chunking of the same sample sequence produces
+    bit-identical filtered values.
+    """
+
+    def __init__(self, alpha: float = 0.5, block: int = EMA_BLOCK):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self.w = 1.0 - alpha
+        self.block = int(block)
+        self._pending: list[np.ndarray] = []
+        self._n_pending = 0
+        self._state: float | None = None   # None until the first sample
+
+    def _filter_block(self, p: np.ndarray, state: float | None) -> np.ndarray:
+        out = self.alpha * np.asarray(p, np.float64)
+        if state is None:
+            out[0] = p[0]                  # batch seeding: out_0 = p_0
+        else:
+            out[0] += self.w * state
+        shift, decay = 1, self.w
+        while shift < len(out) and decay != 0.0:
+            out[shift:] += decay * out[:-shift]
+            shift *= 2
+            decay *= decay
+        return out
+
+    def ingest(self, p: np.ndarray) -> np.ndarray:
+        """Absorb raw samples; return the newly *committed* filtered samples
+        (complete blocks only — the partial tail stays pending)."""
+        p = np.asarray(p, np.float64)
+        if len(p):
+            self._pending.append(p)
+            self._n_pending += len(p)
+        if self._n_pending < self.block:
+            return np.empty(0, np.float64)
+        # one concatenation, then fixed-position block slices (linear in the
+        # buffered samples no matter how large the incoming chunk is)
+        buf = np.concatenate(self._pending)
+        done: list[np.ndarray] = []
+        i = 0
+        while len(buf) - i >= self.block:
+            filt = self._filter_block(buf[i:i + self.block], self._state)
+            self._state = float(filt[-1])
+            done.append(filt)
+            i += self.block
+        rest = buf[i:]
+        self._pending = [rest] if len(rest) else []
+        self._n_pending = len(rest)
+        return np.concatenate(done)
+
+    def pending_view(self) -> np.ndarray:
+        """Filtered values for the pending partial block, without committing
+        filter state (safe to call repeatedly)."""
+        if not self._n_pending:
+            return np.empty(0, np.float64)
+        return self._filter_block(np.concatenate(self._pending), self._state)
+
+    def flush(self) -> np.ndarray:
+        """Commit the pending partial block (end of stream)."""
+        out = self.pending_view()
+        if len(out):
+            self._state = float(out[-1])
+        self._pending, self._n_pending = [], 0
+        return out
+
+
+def _fold_trim(filt: np.ndarray, busy: np.ndarray, seen_busy: bool,
+               tail: list[np.ndarray]):
+    """Advance the idle-trim frontier over one span of filtered samples.
+
+    Returns ``(commits, seen_busy, tail)``: arrays whose membership in the
+    trimmed trace is now decided, the updated head flag, and the new pending
+    tail (samples after the last busy reading so far).  Mirrors the batch
+    ``trim_idle`` — keep [first-busy, last-busy] — on every stream prefix.
+    """
+    commits: list[np.ndarray] = []
+    nz = np.nonzero(busy > 0)[0]
+    if not seen_busy:
+        if len(nz) == 0:
+            return commits, False, tail            # still leading idle: drop
+        filt = filt[nz[0]:]
+        nz = nz - nz[0]
+        seen_busy = True
+    if len(nz) == 0:
+        if len(filt):
+            tail = tail + [filt]
+        return commits, seen_busy, tail
+    last = int(nz[-1])
+    commits = tail + [filt[:last + 1]]
+    tail = [filt[last + 1:]] if last + 1 < len(filt) else []
+    return commits, seen_busy, tail
+
+
+class ProfileBuilder:
+    """Incrementally build a ``WorkloadProfile`` from telemetry chunks."""
+
+    def __init__(self, meta: TraceMeta, tdp: float,
+                 bin_sizes=DEFAULT_BIN_SIZES, alpha: float = 0.5,
+                 ema_block: int = EMA_BLOCK):
+        self.meta = meta
+        self.tdp = float(tdp)
+        self.bin_sizes = tuple(float(c) for c in bin_sizes)
+        if any(c <= 0 for c in self.bin_sizes):
+            raise ValueError(f"bin sizes must be positive: {self.bin_sizes}")
+        self._ema = _BlockedEMA(alpha=alpha, block=ema_block)
+        # running prefix state: last counter readings + expected next index
+        self._energy_j = 0.0
+        self._busy_s = 0.0
+        self._next_index = 0
+        # busy flags for samples still pending inside the EMA
+        self._busy_queue: list[np.ndarray] = []
+        # idle-trim state + committed stats
+        self._seen_busy = False
+        self._tail: list[np.ndarray] = []
+        self._committed: list[np.ndarray] = []
+        self._n_committed = 0
+        self._hist = {c: np.zeros(spikes.num_bins(c), np.float64)
+                      for c in self.bin_sizes}
+        self._finalized = False
+
+    # -- ingestion ------------------------------------------------------
+    def ingest(self, chunk: TelemetryChunk) -> None:
+        """Absorb one chunk of counter readings (must arrive in order)."""
+        if self._finalized:
+            raise ValueError("ProfileBuilder already finalized")
+        if chunk.start_index != self._next_index:
+            raise ValueError(
+                f"chunk starts at sample {chunk.start_index}, expected "
+                f"{self._next_index} (chunks must be contiguous and ordered)")
+        er = np.asarray(chunk.energy_j, np.float64)
+        br = np.asarray(chunk.busy_s, np.float64)
+        if er.shape != br.shape:
+            raise ValueError("energy_j and busy_s readings differ in length")
+        if len(er) == 0:
+            return
+        # differentiate the counters against the running prefix state
+        de = np.diff(np.concatenate([[self._energy_j], er]))
+        db = np.diff(np.concatenate([[self._busy_s], br]))
+        self._energy_j = float(er[-1])
+        self._busy_s = float(br[-1])
+        self._next_index += len(er)
+        p_raw = de / chunk.sample_dt
+        busy = (db > 0).astype(np.float64)
+
+        self._busy_queue.append(busy)
+        filt = self._ema.ingest(p_raw)
+        if len(filt):
+            self._absorb(filt, self._take_busy(len(filt)))
+
+    def _take_busy(self, n: int) -> np.ndarray:
+        buf = np.concatenate(self._busy_queue)
+        taken, rest = buf[:n], buf[n:]
+        self._busy_queue = [rest] if len(rest) else []
+        return taken
+
+    def _absorb(self, filt: np.ndarray, busy: np.ndarray) -> None:
+        commits, self._seen_busy, self._tail = _fold_trim(
+            filt, busy, self._seen_busy, self._tail)
+        for arr in commits:
+            self._commit(arr)
+
+    def _commit(self, arr: np.ndarray) -> None:
+        if not len(arr):
+            return
+        self._committed.append(arr)
+        self._n_committed += len(arr)
+        r = arr / self.tdp
+        r = r[r >= spikes.SPIKE_LO]
+        if len(r):
+            for c, h in self._hist.items():
+                n = len(h)
+                idx = np.clip(((r - spikes.SPIKE_LO) / c).astype(np.int64),
+                              0, n - 1)
+                h += np.bincount(idx, minlength=n).astype(np.float64)
+
+    # -- incremental queries --------------------------------------------
+    @property
+    def n_ingested(self) -> int:
+        """Raw samples absorbed so far."""
+        return self._next_index
+
+    @property
+    def n_committed(self) -> int:
+        """Samples already inside the trimmed trace (excludes the EMA tail
+        and the trailing-idle pending tail)."""
+        return self._n_committed
+
+    @property
+    def fraction(self) -> float:
+        """Fraction of the expected trace ingested (from ``meta``)."""
+        return self.n_ingested / max(self.meta.n_samples, 1)
+
+    def spike_vector(self, bin_size: float) -> np.ndarray:
+        """Normalized spike vector over the *committed* samples — an O(bins)
+        read of the incremental histogram, bit-identical to
+        ``spikes.spike_vector`` on the committed trace."""
+        c = float(bin_size)
+        if c not in self._hist:
+            raise ValueError(f"bin size {bin_size} not tracked; "
+                             f"tracked: {self.bin_sizes}")
+        h = self._hist[c]
+        tot = h.sum()
+        if tot == 0:
+            return np.zeros(len(h))
+        return h / tot
+
+    def spike_count(self, bin_size: float | None = None) -> int:
+        """Committed samples at or above the spike threshold.  The count is
+        the same for every tracked histogram, so ``None`` (the default) reads
+        the first one; an explicitly untracked bin size raises."""
+        c = self.bin_sizes[0] if bin_size is None else float(bin_size)
+        if c not in self._hist:
+            raise ValueError(f"bin size {bin_size} not tracked; "
+                             f"tracked: {self.bin_sizes}")
+        return int(self._hist[c].sum())
+
+    # -- profile emission -----------------------------------------------
+    def _profile(self, trace: np.ndarray, complete: bool) -> PartialProfile:
+        m = self.meta
+        return PartialProfile(
+            name=m.name, tdp=self.tdp, power_trace=trace,
+            sm_util=m.app_sm_util, dram_util=m.app_dram_util,
+            exec_time=m.exec_time, scaling={}, domain=m.domain,
+            fraction=self.fraction, n_samples=self.n_ingested,
+            complete=complete)
+
+    def snapshot(self) -> PartialProfile:
+        """A valid partial profile over everything ingested so far.  Does not
+        mutate builder state — ingestion can continue afterwards."""
+        filt = self._ema.pending_view()
+        pieces = list(self._committed)
+        if len(filt):
+            busy = np.concatenate(self._busy_queue)[:len(filt)] \
+                if self._busy_queue else np.zeros(len(filt))
+            commits, _, _ = _fold_trim(filt, busy, self._seen_busy,
+                                       list(self._tail))
+            pieces += commits
+        trace = np.concatenate(pieces) if pieces else np.empty(0, np.float64)
+        return self._profile(trace, complete=False)
+
+    def finalize(self) -> PartialProfile:
+        """Flush the EMA tail and emit the completed profile.  A full-trace
+        build equals the batch ``simulate`` + ``trim_idle`` path at 1e-9."""
+        if not self._finalized:
+            filt = self._ema.flush()
+            if len(filt):
+                self._absorb(filt, self._take_busy(len(filt)))
+            self._busy_queue = []
+            self._finalized = True
+        trace = np.concatenate(self._committed) if self._committed \
+            else np.empty(0, np.float64)
+        return self._profile(trace, complete=True)
+
+
+# ---------------------------------------------------------------------------
+# streaming equivalents of the batch profiling entry points
+# ---------------------------------------------------------------------------
+def stream_profile_once(stream, model, tdp: float, freq: float = 1.0,
+                        seed: int = 0, sample_dt: float = 1e-3,
+                        target_duration: float = 4.0,
+                        chunk_samples: int = 256) -> PartialProfile:
+    """Streaming twin of ``telemetry.profile_once``: one low-cost profile,
+    built by pumping the chunk stream through a ``ProfileBuilder``."""
+    from repro.telemetry.simulator import stream_telemetry
+    meta, chunks = stream_telemetry(stream, freq, model, seed=seed,
+                                    sample_dt=sample_dt,
+                                    target_duration=target_duration,
+                                    chunk_samples=chunk_samples)
+    builder = ProfileBuilder(meta, tdp)
+    for chunk in chunks:
+        builder.ingest(chunk)
+    return builder.finalize()
+
+
+def stream_profile_workload(stream, model, freqs, tdp: float, seed: int = 0,
+                            sample_dt: float = 1e-3,
+                            target_duration: float = 4.0,
+                            chunk_samples: int = 256) -> WorkloadProfile:
+    """Streaming twin of ``telemetry.profile_workload``: the full reference
+    sweep, one builder per frequency (same per-frequency seeds), assembled
+    into the identical ``WorkloadProfile`` (golden-tested at 1e-9)."""
+    scaling = {}
+    top = max(freqs)
+    top_profile = None
+    for i, f in enumerate(sorted(freqs)):
+        prof = stream_profile_once(stream, model, tdp, freq=f,
+                                   seed=seed * 1009 + i, sample_dt=sample_dt,
+                                   target_duration=target_duration,
+                                   chunk_samples=chunk_samples)
+        tr = prof.power_trace
+        scaling[f] = FreqPoint(
+            freq=f,
+            p90=spikes.p_quantile(tr, tdp, 90),
+            p95=spikes.p_quantile(tr, tdp, 95),
+            p99=spikes.p_quantile(tr, tdp, 99),
+            mean_power=spikes.mean_power_rel(tr, tdp),
+            exec_time=prof.exec_time,
+            spike_vec=spikes.spike_vector(tr, tdp),
+        )
+        if f == top:
+            top_profile = prof
+    return WorkloadProfile(
+        name=top_profile.name, tdp=tdp, power_trace=top_profile.power_trace,
+        sm_util=top_profile.sm_util, dram_util=top_profile.dram_util,
+        exec_time=top_profile.exec_time, scaling=scaling,
+        domain=top_profile.domain,
+    )

@@ -61,8 +61,11 @@ class PowerAwareScheduler:
 
     def schedule(self, jobs: list[tuple[WorkloadProfile, int]],
                  budget_w: float) -> ScheduleResult:
+        # first-fit decreasing with a deterministic tie-break: equal-power
+        # jobs pack in name order regardless of queue order (repacking the
+        # same queue must always produce the same placement)
         plans = sorted((self.plan_job(p, c) for p, c in jobs),
-                       key=lambda j: -j.predicted_p90_w * j.chips)
+                       key=lambda j: (-j.predicted_p90_w * j.chips, j.name))
         res = ScheduleResult(budget_w=budget_w)
         used = 0.0
         for plan in plans:

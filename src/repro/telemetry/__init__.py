@@ -1,5 +1,7 @@
 from repro.telemetry.kernel_stream import Kernel, KernelStream, build_stream
 from repro.telemetry.power_model import TPUPowerModel
-from repro.telemetry.simulator import SimTrace, profile_once, profile_workload, simulate
+from repro.telemetry.simulator import (SimTrace, TelemetryChunk, TraceMeta,
+                                       profile_once, profile_workload,
+                                       simulate, stream_telemetry)
 from repro.telemetry.workloads import (build_holdout_profiles, build_reference_set,
                                        holdout_streams, reference_streams)

@@ -16,6 +16,15 @@ log E) instead of the seed's O(E x S) dense clip-broadcast (preserved in
 ``repro.legacy.integrate_events_dense`` and pinned equivalent to 1e-9 by
 ``tests/test_profiling_engine.py``).  The busy counter uses the same engine
 with unit weights.
+
+Two consumption modes share the event engine:
+
+  * ``simulate`` — the batch path: the whole trace at once (``SimTrace``).
+  * ``stream_telemetry`` — the streaming path: yields ``TelemetryChunk``s of
+    raw *counter readings* (cumulative energy joules + cumulative busy
+    seconds at each sample edge), exactly what a telemetry daemon polls on
+    hardware.  ``repro.pipeline.ProfileBuilder`` ingests these chunks
+    incrementally and can emit a partial profile at any point.
 """
 from __future__ import annotations
 
@@ -43,10 +52,52 @@ class SimTrace:
     kernel_rows: list = field(default_factory=list)
 
 
-def simulate(stream: KernelStream, freq: float, model: TPUPowerModel,
-             sample_dt: float = 1e-3, target_duration: float = 4.0,
-             max_iterations: int = 2000, noise: float = 0.03,
-             seed: int = 0) -> SimTrace:
+@dataclass
+class TelemetryChunk:
+    """One poll of the chip's accumulating counters: readings at the sample
+    edges ``start_index+1 .. start_index+len(energy_j)`` (edge 0 reads 0/0,
+    so the first chunk starts at index 0).  Readings are cumulative since
+    trace start; the consumer differentiates against its own prefix state."""
+    energy_j: np.ndarray         # cumulative energy counter (J), one per edge
+    busy_s: np.ndarray           # cumulative busy-time counter (s), aligned
+    sample_dt: float
+    start_index: int             # absolute sample index of the first reading
+
+
+@dataclass
+class TraceMeta:
+    """Trace-level context a streaming consumer needs up front."""
+    name: str
+    domain: str
+    sample_dt: float
+    n_samples: int               # total samples the stream will deliver
+    exec_time: float             # one iteration of the kernel stream (s)
+    app_sm_util: float
+    app_dram_util: float
+    kernel_rows: list = field(default_factory=list)
+
+
+@dataclass
+class _EventTrace:
+    """Shared precursor of both consumption modes: the event list plus the
+    per-stream aggregates, before any sampling/noise is applied."""
+    t0: np.ndarray               # power-event starts
+    t1: np.ndarray               # power-event ends
+    pw: np.ndarray               # power-event rates (W)
+    busy_t0: np.ndarray          # busy-segment starts
+    busy_t1: np.ndarray          # busy-segment ends
+    edges: np.ndarray            # sample edges (n_samples + 1)
+    n_samples: int
+    sample_dt: float
+    exec_time: float
+    app_sm_util: float
+    app_dram_util: float
+    kernel_rows: list
+
+
+def _event_trace(stream: KernelStream, freq: float, model: TPUPowerModel,
+                 sample_dt: float, target_duration: float,
+                 max_iterations: int) -> _EventTrace:
     execs = [model.exec_kernel(k, freq) for k in stream.kernels]
     gaps = np.array([k.gap_s for k in stream.kernels])
     durs = np.array([e.duration for e in execs])
@@ -99,20 +150,48 @@ def simulate(stream: KernelStream, freq: float, model: TPUPowerModel,
     n_samples = int(total_t / sample_dt)
     edges = np.arange(n_samples + 1) * sample_dt
 
-    energy = integrate_events(t0, t1, pw, edges)
+    busy_t0, busy_t1 = starts[busy_flag > 0], ends[busy_flag > 0]
+    tot_d = durs.sum()
+    app_sm = float((durs * [e.util_c for e in execs]).sum() / max(tot_d, 1e-12))
+    app_dr = float((durs * [e.util_m for e in execs]).sum() / max(tot_d, 1e-12))
+    rows = [(e.duration, e.util_c, e.util_m) for e in execs]
+    return _EventTrace(t0=t0, t1=t1, pw=pw, busy_t0=busy_t0, busy_t1=busy_t1,
+                       edges=edges, n_samples=n_samples, sample_dt=sample_dt,
+                       exec_time=step_time, app_sm_util=app_sm,
+                       app_dram_util=app_dr, kernel_rows=rows)
 
+
+def _noisy_energy_increments(ev: _EventTrace, noise: float,
+                             seed: int) -> np.ndarray:
+    """Per-sample energy-counter increments with sensor noise (paper [87]:
+    energy-derived power is spiky).  RNG call order is frozen — the golden
+    tests pin it against ``legacy.simulate_dense``."""
+    energy = integrate_events(ev.t0, ev.t1, ev.pw, ev.edges)
     rng = np.random.default_rng(seed)
     de = np.diff(energy)
-    de = de * (1.0 + noise * rng.standard_normal(n_samples))
-    # occasional sensor outliers (paper [87]: energy-derived power is spiky)
-    out_mask = rng.random(n_samples) < 0.01
-    de = np.where(out_mask, de * (1.0 + 0.5 * rng.random(n_samples)), de)
+    de = de * (1.0 + noise * rng.standard_normal(ev.n_samples))
+    # occasional sensor outliers
+    out_mask = rng.random(ev.n_samples) < 0.01
+    return np.where(out_mask, de * (1.0 + 0.5 * rng.random(ev.n_samples)), de)
+
+
+def _busy_counter(ev: _EventTrace) -> np.ndarray:
+    """Cumulative busy-seconds counter at every sample edge."""
+    return integrate_events(ev.busy_t0, ev.busy_t1,
+                            np.ones_like(ev.busy_t0), ev.edges)
+
+
+def simulate(stream: KernelStream, freq: float, model: TPUPowerModel,
+             sample_dt: float = 1e-3, target_duration: float = 4.0,
+             max_iterations: int = 2000, noise: float = 0.03,
+             seed: int = 0) -> SimTrace:
+    ev = _event_trace(stream, freq, model, sample_dt, target_duration,
+                      max_iterations)
+    de = _noisy_energy_increments(ev, noise, seed)
     p_raw = de / sample_dt
 
     # busy counter per sample: busy-time overlap via the same event engine
-    busy_t0, busy_t1 = starts[busy_flag > 0], ends[busy_flag > 0]
-    busy_time = np.diff(
-        integrate_events(busy_t0, busy_t1, np.ones_like(busy_t0), edges))
+    busy_time = np.diff(_busy_counter(ev))
     busy = (busy_time > 0).astype(np.float64)
 
     # backend pinned: host-side profiling must stay float64-reproducible
@@ -120,14 +199,46 @@ def simulate(stream: KernelStream, freq: float, model: TPUPowerModel,
     filt = spk.ema_filter(p_raw, alpha=0.5, backend="numpy")
     filt = spk.trim_idle(filt, busy)
 
-    tot_d = durs.sum()
-    app_sm = float((durs * [e.util_c for e in execs]).sum() / max(tot_d, 1e-12))
-    app_dr = float((durs * [e.util_m for e in execs]).sum() / max(tot_d, 1e-12))
-    rows = [(e.duration, e.util_c, e.util_m) for e in execs]
     return SimTrace(power_filtered=filt, power_raw=p_raw, busy=busy,
-                    sample_dt=sample_dt, exec_time=step_time,
-                    app_sm_util=app_sm, app_dram_util=app_dr,
-                    kernel_rows=rows)
+                    sample_dt=sample_dt, exec_time=ev.exec_time,
+                    app_sm_util=ev.app_sm_util, app_dram_util=ev.app_dram_util,
+                    kernel_rows=ev.kernel_rows)
+
+
+def stream_telemetry(stream: KernelStream, freq: float, model: TPUPowerModel,
+                     sample_dt: float = 1e-3, target_duration: float = 4.0,
+                     max_iterations: int = 2000, noise: float = 0.03,
+                     seed: int = 0, chunk_samples: int = 256):
+    """Streaming twin of ``simulate``: ``(meta, chunk_iterator)``.
+
+    The iterator yields ``TelemetryChunk``s of cumulative counter readings —
+    the same noisy energy increments the batch path turns into ``power_raw``,
+    re-accumulated into the counter a real daemon would poll.  Feeding every
+    chunk to ``repro.pipeline.ProfileBuilder`` reproduces the batch
+    ``simulate`` trace (golden-tested at 1e-9), and any prefix of the chunks
+    yields a valid partial profile.
+    """
+    if chunk_samples <= 0:
+        raise ValueError(f"chunk_samples must be positive, got {chunk_samples}")
+    ev = _event_trace(stream, freq, model, sample_dt, target_duration,
+                      max_iterations)
+    de = _noisy_energy_increments(ev, noise, seed)
+    energy_ctr = np.concatenate([[0.0], np.cumsum(de)])
+    busy_ctr = _busy_counter(ev)
+    meta = TraceMeta(name=stream.name, domain=stream.domain,
+                     sample_dt=sample_dt, n_samples=ev.n_samples,
+                     exec_time=ev.exec_time, app_sm_util=ev.app_sm_util,
+                     app_dram_util=ev.app_dram_util,
+                     kernel_rows=ev.kernel_rows)
+
+    def chunks():
+        for i in range(0, ev.n_samples, chunk_samples):
+            j = min(i + chunk_samples, ev.n_samples)
+            yield TelemetryChunk(energy_j=energy_ctr[i + 1:j + 1],
+                                 busy_s=busy_ctr[i + 1:j + 1],
+                                 sample_dt=sample_dt, start_index=i)
+
+    return meta, chunks()
 
 
 def integrate_events(t0: np.ndarray, t1: np.ndarray, pw: np.ndarray,

@@ -1,0 +1,313 @@
+"""Streaming pipeline tests: ProfileBuilder golden equivalence + chunking
+invariance, ReferenceLibrary versioning/persistence/warm-start byte-identity,
+and the OnlineCapController decision gates."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spikes
+from repro.core.algorithm1 import select_optimal_freq
+from repro.core.classify import MinosClassifier
+from repro.pipeline import (OnlineCapController, ProfileBuilder,
+                            ReferenceLibrary, classify_with_margin,
+                            stream_profile_once, stream_profile_workload)
+from repro.sched import SimActuator
+from repro.telemetry import (TPUPowerModel, profile_once, profile_workload,
+                             stream_telemetry)
+from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
+                                           micro_spmv_memory, micro_stencil)
+from repro.telemetry.simulator import TelemetryChunk, TraceMeta
+
+MODEL = TPUPowerModel()
+TDP = MODEL.spec.tdp_w
+FREQS = (0.6, 0.8, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# ProfileBuilder: golden equivalence against the batch path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("stream_fn", [micro_gemm, micro_idle_burst,
+                                       micro_spmv_memory])
+def test_stream_profile_once_matches_batch(stream_fn):
+    batch = profile_once(stream_fn(), MODEL, TDP, seed=5)
+    streamed = stream_profile_once(stream_fn(), MODEL, TDP, seed=5,
+                                   chunk_samples=173)
+    np.testing.assert_allclose(streamed.power_trace, batch.power_trace,
+                               rtol=1e-9, atol=1e-9)
+    assert streamed.name == batch.name
+    assert streamed.sm_util == batch.sm_util
+    assert streamed.dram_util == batch.dram_util
+    assert streamed.exec_time == batch.exec_time
+    assert streamed.complete and streamed.fraction == 1.0
+
+
+def test_stream_profile_workload_matches_batch():
+    batch = profile_workload(micro_gemm(), MODEL, FREQS, TDP, seed=3,
+                             target_duration=1.0)
+    streamed = stream_profile_workload(micro_gemm(), MODEL, FREQS, TDP,
+                                       seed=3, target_duration=1.0)
+    np.testing.assert_allclose(streamed.power_trace, batch.power_trace,
+                               rtol=1e-9, atol=1e-9)
+    assert set(streamed.scaling) == set(batch.scaling)
+    for f in FREQS:
+        a, b = streamed.scaling[f], batch.scaling[f]
+        for attr in ("freq", "p90", "p95", "p99", "mean_power", "exec_time"):
+            assert getattr(a, attr) == pytest.approx(getattr(b, attr),
+                                                     abs=1e-9), (f, attr)
+        np.testing.assert_allclose(a.spike_vec, b.spike_vec, atol=1e-9)
+
+
+def test_builder_incremental_histogram_matches_trace():
+    meta, chunks = stream_telemetry(micro_idle_burst(), 1.0, MODEL, seed=2,
+                                    target_duration=1.0, chunk_samples=97)
+    b = ProfileBuilder(meta, TDP)
+    for chunk in chunks:
+        b.ingest(chunk)
+    prof = b.finalize()
+    for c in b.bin_sizes:
+        np.testing.assert_array_equal(
+            b.spike_vector(c), spikes.spike_vector(prof.power_trace, TDP, c))
+
+
+def test_builder_snapshot_is_pure_and_monotone():
+    meta, chunks = stream_telemetry(micro_stencil(), 1.0, MODEL, seed=4,
+                                    target_duration=1.0, chunk_samples=200)
+    b = ProfileBuilder(meta, TDP)
+    last_n = -1
+    for chunk in chunks:
+        b.ingest(chunk)
+        s1 = b.snapshot()
+        s2 = b.snapshot()                 # snapshot must not mutate state
+        np.testing.assert_array_equal(s1.power_trace, s2.power_trace)
+        assert not s1.complete
+        assert b.n_ingested > last_n
+        last_n = b.n_ingested
+    # snapshotting along the way must not have perturbed the final build
+    ref = stream_profile_once(micro_stencil(), MODEL, TDP, seed=4,
+                              chunk_samples=200, target_duration=1.0)
+    np.testing.assert_array_equal(b.finalize().power_trace, ref.power_trace)
+
+
+def test_builder_rejects_bad_streams():
+    meta, chunks = stream_telemetry(micro_gemm(), 1.0, MODEL, seed=0,
+                                    target_duration=1.0)
+    chunk = next(iter(chunks))
+    b = ProfileBuilder(meta, TDP)
+    with pytest.raises(ValueError, match="expected 0"):
+        b.ingest(dataclasses.replace(chunk, start_index=5))
+    with pytest.raises(ValueError, match="differ in length"):
+        b.ingest(dataclasses.replace(chunk, busy_s=chunk.busy_s[:-1]))
+    b.ingest(chunk)
+    b.finalize()
+    with pytest.raises(ValueError, match="finalized"):
+        b.ingest(chunk)
+    with pytest.raises(ValueError, match="not tracked"):
+        b.spike_vector(0.33)
+    with pytest.raises(ValueError, match="chunk_samples"):
+        stream_telemetry(micro_gemm(), 1.0, MODEL, chunk_samples=0)
+
+
+# ---------------------------------------------------------------------------
+# chunking invariance: the property the streaming design hinges on
+# ---------------------------------------------------------------------------
+def _synthetic_stream(seed: int, n: int):
+    """Raw counter readings with idle head/tail, busy gaps, and power
+    straddling every spike-bin edge."""
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.0, 2.1 * TDP, n)
+    de = p * 1e-3
+    busy = (rng.random(n) < 0.7).astype(np.float64)
+    head = rng.integers(0, n // 3 + 1)
+    tail = rng.integers(0, n // 3 + 1)
+    busy[:head] = 0.0
+    busy[n - tail:] = 0.0
+    energy_ctr = np.concatenate([[0.0], np.cumsum(de)])
+    busy_ctr = np.concatenate([[0.0], np.cumsum(busy * 1e-3)])
+    meta = TraceMeta(name="synthetic", domain="test", sample_dt=1e-3,
+                     n_samples=n, exec_time=1.0, app_sm_util=0.5,
+                     app_dram_util=0.5, kernel_rows=[])
+    return meta, energy_ctr, busy_ctr
+
+
+def _ingest_chunked(meta, energy_ctr, busy_ctr, cuts):
+    b = ProfileBuilder(meta, TDP)
+    bounds = [0] + sorted(cuts) + [meta.n_samples]
+    for i, j in zip(bounds[:-1], bounds[1:]):
+        if i == j:
+            continue
+        b.ingest(TelemetryChunk(energy_j=energy_ctr[i + 1:j + 1],
+                                busy_s=busy_ctr[i + 1:j + 1],
+                                sample_dt=meta.sample_dt, start_index=i))
+    return b
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=1500),
+       st.lists(st.integers(min_value=0, max_value=1499), min_size=0,
+                max_size=12))
+@settings(max_examples=40, deadline=None)
+def test_any_chunking_reproduces_batch_spike_vector(seed, n, raw_cuts):
+    """Property: however an event stream is chunked, ProfileBuilder's spike
+    vectors and trace are bit-for-bit identical to ingesting the whole
+    stream as one batch chunk."""
+    meta, energy_ctr, busy_ctr = _synthetic_stream(seed, n)
+    cuts = [min(c, n) for c in raw_cuts]
+    batch = _ingest_chunked(meta, energy_ctr, busy_ctr, [])
+    chunked = _ingest_chunked(meta, energy_ctr, busy_ctr, cuts)
+    for c in batch.bin_sizes:
+        np.testing.assert_array_equal(chunked.spike_vector(c),
+                                      batch.spike_vector(c))
+    np.testing.assert_array_equal(chunked.finalize().power_trace,
+                                  batch.finalize().power_trace)
+
+
+@pytest.mark.parametrize("chunk_samples", [1, 7, 64, 1000, 10 ** 9])
+def test_simulator_chunk_size_invariance(chunk_samples):
+    ref = stream_profile_once(micro_idle_burst(), MODEL, TDP, seed=9,
+                              target_duration=1.0, chunk_samples=256)
+    got = stream_profile_once(micro_idle_burst(), MODEL, TDP, seed=9,
+                              target_duration=1.0,
+                              chunk_samples=chunk_samples)
+    np.testing.assert_array_equal(got.power_trace, ref.power_trace)
+
+
+# ---------------------------------------------------------------------------
+# ReferenceLibrary: versioning, persistence, warm start, dedup
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_library():
+    profs = [stream_profile_workload(s, MODEL, FREQS, TDP, seed=i,
+                                     target_duration=0.5)
+             for i, s in enumerate([micro_gemm(), micro_idle_burst(),
+                                    micro_spmv_memory(), micro_stencil()])]
+    return ReferenceLibrary(profs)
+
+
+def test_library_add_remove_versioning(small_library):
+    lib = ReferenceLibrary(small_library.profiles)
+    v0 = lib.version
+    M0 = lib.spike_matrix(0.1).copy()
+    p = lib.remove("sgemm-25k")
+    assert lib.version == v0 + 1
+    assert "sgemm-25k" not in lib
+    np.testing.assert_array_equal(lib.spike_matrix(0.1), M0[1:])
+    lib.add(p)
+    assert lib.version == v0 + 2
+    np.testing.assert_array_equal(lib.spike_matrix(0.1),
+                                  np.vstack([M0[1:], M0[:1]]))
+    with pytest.raises(ValueError, match="duplicate"):
+        lib.add(p)
+    with pytest.raises(KeyError):
+        lib.remove("nope")
+
+
+def test_library_save_load_warm_start_byte_identical(small_library, tmp_path):
+    d = str(tmp_path / "lib")
+    small_library.save(d)
+    loaded = ReferenceLibrary.load(d)
+    assert loaded.names == small_library.names
+    assert loaded.fingerprint() == small_library.fingerprint()
+    for p, q in zip(small_library.profiles, loaded.profiles):
+        assert q.power_trace.dtype == np.float64
+        np.testing.assert_array_equal(p.power_trace, q.power_trace)
+        assert list(p.scaling) == list(q.scaling)
+    # warm classifier adopts the on-disk matrices; cold recomputes — the
+    # matrices and every neighbor decision must be byte-identical
+    warm = loaded.classifier()
+    cold = MinosClassifier(loaded.profiles)
+    targets = [profile_once(micro_stencil(), MODEL, TDP, seed=31)]
+    for c in small_library.bin_sizes:
+        np.testing.assert_array_equal(warm.spike_matrix(c),
+                                      cold.spike_matrix(c))
+        (nw, dw), = warm.power_neighbors(targets, bin_size=c)
+        (nc, dc), = cold.power_neighbors(targets, bin_size=c)
+        assert nw.name == nc.name and dw == dc
+
+
+def test_library_stale_cache_is_rejected(small_library, tmp_path):
+    d = str(tmp_path / "lib")
+    small_library.save(d)
+    with open(os.path.join(d, "library.json")) as f:
+        meta = json.load(f)
+    meta["fingerprint"] = "stale"
+    with open(os.path.join(d, "library.json"), "w") as f:
+        json.dump(meta, f)
+    loaded = ReferenceLibrary.load(d)
+    assert loaded._spike == {}            # cache dropped, not trusted
+    loaded.classifier()                   # still classifies (cold rebuild)
+
+
+def test_library_subset_keeps_warm_rows(small_library):
+    lib = ReferenceLibrary(small_library.profiles)
+    full = lib.spike_matrix(0.1)
+    sub = lib.subset(lambda p: p.name != "sgemm-25k")
+    assert sub.names == [n for n in lib.names if n != "sgemm-25k"]
+    np.testing.assert_array_equal(sub.spike_matrix(0.1), full[1:])
+
+
+def test_library_dedup_removes_clones(small_library):
+    lib = ReferenceLibrary(small_library.profiles)
+    clone = dataclasses.replace(lib.profiles[0], name="clone-a")
+    lib.add(clone)
+    removed = lib.dedup(max_distance=1e-9)
+    assert removed == ["clone-a"]
+    assert lib.dedup(max_distance=1e-9) == []
+
+
+# ---------------------------------------------------------------------------
+# OnlineCapController
+# ---------------------------------------------------------------------------
+def test_classify_with_margin_bounds(small_library):
+    clf = small_library.classifier()
+    target = profile_once(micro_stencil(), MODEL, TDP, seed=7)
+    sel, conf = classify_with_margin(target, clf)
+    assert 0.0 <= conf <= 1.0
+    assert sel.power_neighbor == select_optimal_freq(target, clf).power_neighbor
+    # a single-reference library is trivially confident
+    solo = ReferenceLibrary(small_library.profiles[:1]).classifier()
+    _, conf_solo = classify_with_margin(target, solo)
+    assert conf_solo == 1.0
+
+
+def test_controller_gates_and_early_decision(small_library):
+    actuator = SimActuator()
+    ctl = OnlineCapController(small_library, actuator=actuator,
+                              min_confidence=0.0, min_fraction=0.3,
+                              min_spike_samples=10)
+    meta, chunks = stream_telemetry(micro_gemm(), 1.0, MODEL, seed=12,
+                                    target_duration=1.0, chunk_samples=128)
+    b = ProfileBuilder(meta, TDP)
+    decision = None
+    for chunk in chunks:
+        b.ingest(chunk)
+        decision = ctl.observe(b)
+        if decision is not None:
+            break
+        assert b.fraction < 0.3 or b.spike_count() < 10
+    assert decision is not None and decision.early
+    assert decision.fraction >= 0.3
+    assert actuator.get_cap() == decision.cap
+    assert ctl.decisions == [decision]
+
+
+def test_controller_run_falls_back_to_finalize(small_library):
+    # an impossible confidence bar: the decision must come from the full
+    # profile, flagged as not-early, and match the batch Algorithm 1 cap
+    ctl = OnlineCapController(small_library, min_confidence=2.0)
+    meta, chunks = stream_telemetry(micro_gemm(), 1.0, MODEL, seed=12,
+                                    target_duration=1.0)
+    decision = ctl.run(meta, chunks, TDP)
+    assert not decision.early and decision.fraction == 1.0
+    full = stream_profile_once(micro_gemm(), MODEL, TDP, seed=12,
+                               target_duration=1.0)
+    clf = small_library.classifier()
+    assert decision.cap == select_optimal_freq(full, clf).f_pwr
+
+
+def test_controller_rejects_bad_objective(small_library):
+    with pytest.raises(ValueError, match="objective"):
+        OnlineCapController(small_library, objective="fastest")

@@ -1,0 +1,110 @@
+"""Regression tests for the reference-store roundtrip contract: profile
+ordering, scaling-dict float keys, and dtypes must survive
+``save_profiles`` -> ``load_profiles`` exactly.  The store is now a
+deprecation shim over ``pipeline.ReferenceLibrary``; these tests pin both the
+shim behavior (warnings included) and backward compatibility with pre-shim
+float32 archives."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.classify import FreqPoint, WorkloadProfile
+from repro.core.reference_store import load_profiles, save_profiles
+from repro.pipeline import ReferenceLibrary
+
+TDP = 180.0
+# deliberately awkward frequency keys: only exact float-key preservation
+# (via repr/float roundtrip) keeps scaling lookups working after a reload
+FREQS = (0.6, 2.0 / 3.0, 0.8125, 1.0)
+
+
+def _profile(name: str, level: float, seed: int) -> WorkloadProfile:
+    rng = np.random.default_rng(seed)
+    scaling = {
+        f: FreqPoint(freq=f, p90=level * f, p95=level * f + 0.03,
+                     p99=level * f + 0.07, mean_power=level * f - 0.1,
+                     exec_time=1.0 / f)
+        for f in FREQS
+    }
+    return WorkloadProfile(
+        name=name, tdp=TDP, power_trace=rng.normal(level * TDP, 7.0, 321),
+        sm_util=rng.random(), dram_util=rng.random(), exec_time=1.25,
+        scaling=scaling, domain="test")
+
+
+@pytest.fixture()
+def profiles():
+    # z-/a- names: ordering must come from the save order, not name sort
+    return [_profile("z-gemm", 1.3, 0), _profile("a-spmv", 0.7, 1),
+            _profile("m-stencil", 0.95, 2)]
+
+
+def test_roundtrip_preserves_keys_dtypes_and_order(profiles, tmp_path):
+    d = str(tmp_path)
+    with pytest.deprecated_call():
+        save_profiles(profiles, d)
+    with pytest.deprecated_call():
+        loaded = load_profiles(d)
+
+    assert [p.name for p in loaded] == [p.name for p in profiles]
+    for orig, got in zip(profiles, loaded):
+        # scaling keys: exact floats, in insertion order
+        assert list(got.scaling) == list(orig.scaling)
+        for f in FREQS:
+            assert f in got.scaling        # exact float key, not a repr-ish
+            a, b = orig.scaling[f], got.scaling[f]
+            for attr in ("freq", "p90", "p95", "p99", "mean_power",
+                         "exec_time"):
+                assert getattr(a, attr) == getattr(b, attr), (f, attr)
+        # dtypes: float64 in, float64 out, bit-exact traces
+        assert got.power_trace.dtype == np.float64
+        np.testing.assert_array_equal(got.power_trace, orig.power_trace)
+        assert got.tdp == orig.tdp
+        assert got.sm_util == orig.sm_util
+        assert got.dram_util == orig.dram_util
+        assert got.exec_time == orig.exec_time
+        assert got.domain == orig.domain
+
+
+def test_loads_pre_shim_float32_archives(profiles, tmp_path):
+    """Directories written by the pre-PR-2 store (float32 traces, no
+    library.json/spike_cache.npz sidecars) must still load."""
+    d = str(tmp_path)
+    meta, arrays = {}, {}
+    for i, p in enumerate(profiles):
+        key = f"trace_{i}"
+        arrays[key] = np.asarray(p.power_trace, np.float32)
+        meta[p.name] = {
+            "trace_key": key, "tdp": p.tdp, "sm_util": p.sm_util,
+            "dram_util": p.dram_util, "exec_time": p.exec_time,
+            "domain": p.domain,
+            "scaling": {str(f): {
+                "freq": fp.freq, "p90": fp.p90, "p95": fp.p95, "p99": fp.p99,
+                "mean_power": fp.mean_power, "exec_time": fp.exec_time}
+                for f, fp in p.scaling.items()},
+        }
+    np.savez_compressed(os.path.join(d, "traces.npz"), **arrays)
+    with open(os.path.join(d, "profiles.json"), "w") as f:
+        json.dump(meta, f)
+
+    lib = ReferenceLibrary.load(d)
+    assert lib.names == [p.name for p in profiles]
+    assert lib._spike == {}               # no sidecars -> cold start
+    for orig, got in zip(profiles, lib.profiles):
+        assert got.power_trace.dtype == np.float64
+        np.testing.assert_allclose(got.power_trace, orig.power_trace,
+                                   rtol=1e-6, atol=1e-4)
+        assert list(got.scaling) == list(orig.scaling)
+    lib.classifier()                      # still classifies
+
+
+def test_shim_and_library_formats_interoperate(profiles, tmp_path):
+    d = str(tmp_path / "lib")
+    ReferenceLibrary(profiles).save(d)
+    with pytest.deprecated_call():
+        loaded = load_profiles(d)          # shim reads library format
+    assert [p.name for p in loaded] == [p.name for p in profiles]
+    np.testing.assert_array_equal(loaded[0].power_trace,
+                                  profiles[0].power_trace)

@@ -65,3 +65,23 @@ def test_power_scheduler_packs_within_budget():
     assert res.planned_power_w <= budget
     tight = sched.schedule(jobs, budget_w=16 * TDP * 0.9)
     assert len(tight.deferred) >= 1
+
+
+def test_ffd_tie_break_is_deterministic_by_name():
+    """Equal-power jobs must pack in name order regardless of queue order."""
+    refs = [_ref("hot", 1.4, 0.95, 0.1), _ref("cool", 0.7, 0.1, 0.9)]
+    clf = MinosClassifier(refs)
+    sched = PowerAwareScheduler(clf, tdp_w=TDP, objective="powercentric")
+    # four identical-power jobs (same profile shape, same chips)
+    jobs = [(_ref(f"job-{tag}", 1.38, 0.93, 0.12), 16)
+            for tag in ("delta", "alpha", "charlie", "bravo")]
+    budget = 2.5 * 16 * TDP * 1.4          # room for ~2 of the 4
+    res = sched.schedule(jobs, budget_w=budget)
+    powers = {j.predicted_p90_w for j in res.placed}
+    assert len(powers) == 1                # genuinely tied on power
+    assert [j.name for j in res.placed] == sorted(j.name for j in res.placed)
+    # any queue permutation packs the identical job set, in the same order
+    for perm in ([3, 1, 0, 2], [2, 3, 1, 0]):
+        res2 = sched.schedule([jobs[i] for i in perm], budget_w=budget)
+        assert [j.name for j in res2.placed] == [j.name for j in res.placed]
+        assert res2.deferred == res.deferred
