@@ -25,7 +25,12 @@ STORE = os.path.join(RESULTS, "reference_store")
 def reference_library(rebuild: bool = False) -> ReferenceLibrary:
     os.makedirs(RESULTS, exist_ok=True)
     if not rebuild and os.path.exists(os.path.join(STORE, "profiles.json")):
-        return ReferenceLibrary.load(STORE)
+        lib = ReferenceLibrary.load(STORE)
+        # backfill provenance on pre-fleet stores: this function only ever
+        # builds on the nominal v5e model, so a missing built_on is v5e
+        if not lib.built_on:
+            lib.built_on = TPUPowerModel().spec.name
+        return lib
     t0 = time.time()
     lib = build_reference_library(TPUPowerModel(), target_duration=3.0)
     lib.save(STORE)

@@ -1,32 +1,36 @@
-"""Fleet what-if: pack a job mix into a pod power budget using Minos
-predictions (the paper's POLCA-style oversubscription use case, §4.3) — with
-jobs admitted one at a time through the online pipeline.
+"""Fleet what-if: admit a job mix onto a heterogeneous, variability-aware
+pod under a shared power budget (the paper's POLCA-style oversubscription
+use case, §4.3 — now cluster-wide).
 
-    PYTHONPATH=src python examples/fleet_power_planner.py
+    PYTHONPATH=src:. python examples/fleet_power_planner.py
 
-Each queued job streams its single uncapped profiling run through
-``OnlineCapController``; as soon as the controller is confident it issues the
-cap and the pod is re-packed (deterministic first-fit-decreasing) around the
-new job's predicted p90 power.
+The fleet API path end to end: a seeded ``DeviceInventory`` (two chip
+generations, per-device silicon variability), every job's single uncapped
+profiling run multiplexed through ``FleetTelemetryMux``, and a
+``FleetCapController`` that caps each job early on its own device and
+re-packs the pod (heterogeneity-aware first-fit-decreasing) the moment any
+cap lands.  The single shipped reference library — built on the nominal
+v5e — serves every device through effective-TDP normalization.
 """
 from benchmarks.common import reference_library
-from repro.analysis.hardware import V5E
-from repro.pipeline import OnlineCapController, ProfileBuilder
-from repro.sched import PowerAwareScheduler
-from repro.telemetry import TPUPowerModel, stream_telemetry
+from repro.fleet import (DeviceInventory, FleetCapController,
+                         FleetTelemetryMux, VariabilityModel)
+from repro.telemetry import stream_telemetry
 from repro.telemetry.workloads import holdout_streams, reference_streams
 
 
 def main() -> None:
     lib = reference_library()
-    clf = lib.classifier()          # warm-started from the on-disk cache
-    sched = PowerAwareScheduler(clf, tdp_w=V5E.tdp_w,
-                                objective="powercentric")
-    controller = OnlineCapController(clf, objective="powercentric",
-                                     min_confidence=0.2)
+    inventory = DeviceInventory.generate({"tpu-v5e": 4, "tpu-v5p": 2},
+                                         VariabilityModel(), seed=3)
+    print(f"fleet: {len(inventory)} devices "
+          f"({', '.join(inventory.models)}; built_on={lib.built_on!r})")
+    for d in inventory:
+        print(f"  {d.device_id:14s} perf x{d.spec.perf_scale:.3f} "
+              f"power x{d.spec.power_scale:.3f} "
+              f"eff-TDP {d.effective_tdp_w:5.1f} W")
 
-    # a queue of jobs: each streams one uncapped profiling run
-    model = TPUPowerModel()
+    # a queue of jobs, round-robined onto devices
     streams = {s.name: s for s in reference_streams() + holdout_streams()}
     queue = [
         ("command-r-35b:train_4k", 256),
@@ -35,48 +39,44 @@ def main() -> None:
         ("granite-moe-3b-a800m:decode_32k", 64),
         ("lsms-like", 32),
     ]
-    total_chips = sum(c for _, c in queue)
-    nameplate = total_chips * V5E.tdp_w
+    nameplate = sum(chips * inventory[i % len(inventory)].nameplate_w
+                    for i, (_, chips) in enumerate(queue))
     budget = 0.75 * nameplate   # an oversubscribed pod
-    print(f"pod: {total_chips} chips, nameplate {nameplate/1e3:.0f} kW, "
-          f"budget {budget/1e3:.0f} kW (75% oversubscription)")
+    print(f"\npod: {sum(c for _, c in queue)} chips, nameplate "
+          f"{nameplate / 1e3:.0f} kW, budget {budget / 1e3:.0f} kW "
+          f"(75% oversubscription)")
 
-    admitted = []
-    res = None
+    fleet = FleetCapController(lib, budget_w=budget,
+                               objective="powercentric", min_confidence=0.2)
+    mux = FleetTelemetryMux()
     for i, (name, chips) in enumerate(queue):
-        meta, chunks = stream_telemetry(streams[name], 1.0, model, seed=i)
-        builder = ProfileBuilder(meta, V5E.tdp_w)
-        decision = None
-        for chunk in chunks:
-            builder.ingest(chunk)
-            decision = controller.observe(builder)
-            if decision is not None:
-                break
-        if decision is None:
-            decision = controller.finalize(builder)
-        profile = builder.snapshot() if decision.early \
-            else builder.finalize()
-        admitted.append((profile, chips))
-        # cap decided -> re-pack the pod around the new power picture
-        res = controller.repack(sched, admitted, budget_w=budget)
-        when = f"{decision.fraction:4.0%} of trace" if decision.early \
-            else "full trace"
-        print(f"  + {name:36s} cap=f{decision.cap:.2f} ({when})  "
-              f"-> {len(res.placed)} placed / {len(res.deferred)} deferred, "
-              f"{res.planned_power_w/1e3:5.0f} kW planned")
+        device = inventory[i % len(inventory)]
+        meta, chunks = stream_telemetry(streams[name], 1.0,
+                                        device.power_model(), seed=i,
+                                        device_id=device.device_id)
+        mux.add_job(fleet.admit(device, meta, chips), meta, chunks)
 
-    # res already holds the re-pack from the last admission
+    result = fleet.run(mux)
+    print(f"\nmultiplexed run: {result.early_decisions}/{len(queue)} jobs "
+          f"capped early, {result.repacks} re-packs, "
+          f"{result.chunks_dropped} telemetry chunks saved")
+    for job_id, d in result.decisions.items():
+        when = f"{d.fraction:4.0%} of trace" if d.early else "full trace"
+        print(f"  {job_id:48s} cap=f{d.cap:.2f} ({when})")
+
+    res = result.schedule
     print(f"\nfinal packing: {len(res.placed)} jobs placed, "
           f"{len(res.deferred)} deferred:")
     for j in res.placed:
         print(f"  {j.name:36s} chips={j.chips:4d} cap=f{j.cap:.2f} "
-              f"p90={j.predicted_p90_w:5.0f} W/chip "
-              f"(neighbor: {j.selection.power_neighbor})")
+              f"{fleet.scheduler.quantile}={j.predicted_p90_w:5.0f} W/chip "
+              f"on {j.device_id} (neighbor: {j.selection.power_neighbor})")
     for name in res.deferred:
         print(f"  deferred: {name}")
-    print(f"\nplanned p90 power: {res.planned_power_w/1e3:.0f} kW "
-          f"({res.planned_power_w/budget:.0%} of budget; a TDP-provisioned "
-          f"scheduler would reserve {nameplate/1e3:.0f} kW)")
+    print(f"\nplanned power: {res.planned_power_w / 1e3:.0f} kW "
+          f"({res.planned_power_w / budget:.0%} of budget); headroom "
+          f"reclaimed vs TDP provisioning: "
+          f"{res.headroom_reclaimed_w / 1e3:+.1f} kW")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,39 @@
+"""Heterogeneous fleet layer: variability-aware device models, multiplexed
+telemetry, and cluster-wide online capping.
+
+The fleet API path (the scale-out front door on top of ``repro.pipeline``):
+
+    from repro.fleet import (DeviceInventory, VariabilityModel,
+                             FleetTelemetryMux, FleetCapController)
+
+    inv = DeviceInventory.generate({"tpu-v5e": 6, "tpu-v5p": 2},
+                                   VariabilityModel(), seed=0)
+    fleet = FleetCapController(lib, budget_w=0.8 * total_nameplate)
+    mux = FleetTelemetryMux()
+    for (stream, chips), dev in zip(jobs, inv):
+        meta, chunks = stream_telemetry(stream, 1.0, dev.power_model(),
+                                        device_id=dev.device_id)
+        mux.add_job(fleet.admit(dev, meta, chips), meta, chunks)
+    result = fleet.run(mux)        # early caps + budget-aware packing
+
+Three layers:
+
+  * ``inventory`` — ``DeviceInstance``/``DeviceInventory``: multiple chip
+    generations (``analysis.hardware.CHIP_MODELS``) with seeded per-device
+    perf/power variability draws; device-portable profile normalization.
+  * ``mux`` — ``FleetTelemetryMux``: deterministically interleaves many
+    jobs' ``TelemetryChunk`` streams into one system-wide feed.
+  * ``controller`` — ``FleetCapController``: one ``OnlineCapController``
+    per job under a shared cluster power budget, re-packing through the
+    heterogeneity-aware ``PowerAwareScheduler`` on every early cap.
+"""
+from repro.fleet.controller import FleetCapController, FleetJob, FleetResult
+from repro.fleet.inventory import (DeviceInstance, DeviceInventory,
+                                   VariabilityModel)
+from repro.fleet.mux import FleetChunk, FleetTelemetryMux
+
+__all__ = [
+    "DeviceInstance", "DeviceInventory", "VariabilityModel",
+    "FleetChunk", "FleetTelemetryMux",
+    "FleetCapController", "FleetJob", "FleetResult",
+]

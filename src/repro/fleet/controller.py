@@ -1,0 +1,174 @@
+"""Cluster-wide online capping under a shared power budget.
+
+``FleetCapController`` scales the PR 2 single-job pipeline to a
+heterogeneous fleet: every admitted job gets its own ``ProfileBuilder`` and
+``OnlineCapController`` (sharing one warm classifier), fed from the
+``FleetTelemetryMux``'s interleaved chunk feed.  The moment any job's
+confidence gate clears, its cap is actuated on its device and the whole pod
+is re-packed through the heterogeneity-aware ``PowerAwareScheduler`` against
+the shared cluster budget — the POLCA-style early-re-provisioning loop, now
+cluster-wide.
+
+Device portability: each job's builder normalizes by its *device's*
+effective TDP (nameplate x per-chip power variability), so the partial
+profiles it hands the classifier are in the same relative frame as the
+single shipped (nominal-v5e) ``ReferenceLibrary``.  On a homogeneous
+zero-variability fleet that base equals the nameplate TDP bit-for-bit, and
+every per-job decision is byte-identical to running the single-job
+``OnlineCapController.run`` path — the invariance ``tests/test_fleet.py``
+pins.
+
+Once a job has a decision its remaining telemetry is dropped (profiling
+stops early on the device — the paper's cost saving).  Packing provisions
+the neighbor's p99 (not p90) per-chip power by default so coincident
+cross-job spikes stay inside the budget; ``benchmarks/bench_fleet.py``
+validates the aggregate simulated fleet trace against it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.classify import MinosClassifier
+from repro.fleet.inventory import DeviceInstance
+from repro.fleet.mux import FleetChunk, FleetTelemetryMux
+from repro.pipeline.builder import ProfileBuilder
+from repro.pipeline.library import ReferenceLibrary
+from repro.pipeline.online import CapDecision, OnlineCapController
+from repro.sched.dvfs import SimActuator
+from repro.sched.power_sched import JobPlan, PowerAwareScheduler, \
+    ScheduleResult
+
+
+@dataclass
+class FleetJob:
+    """One admitted job: its device binding plus the per-job pipeline."""
+    job_id: str
+    device: DeviceInstance
+    chips: int
+    builder: ProfileBuilder
+    controller: OnlineCapController
+    actuator: SimActuator
+    decision: CapDecision | None = None
+    plan: JobPlan | None = None    # built once, when the decision lands
+
+
+@dataclass
+class FleetResult:
+    """Outcome of one fleet run: per-job decisions + the final packing."""
+    decisions: dict[str, CapDecision] = field(default_factory=dict)
+    schedule: ScheduleResult | None = None
+    repacks: int = 0             # how many early caps triggered a re-pack
+    budget_w: float = 0.0
+    chunks_dropped: int = 0      # telemetry skipped after early decisions
+
+    @property
+    def early_decisions(self) -> int:
+        return sum(d.early for d in self.decisions.values())
+
+
+class FleetCapController:
+    """Run one ``OnlineCapController`` per job under a shared power budget.
+
+    ``references`` is a ``ReferenceLibrary`` (preferred: warm classifier) or
+    a prebuilt ``MinosClassifier`` — shared by every job.  Gate thresholds
+    (``min_confidence`` etc.) are forwarded verbatim to each per-job
+    controller, so a one-job fleet reproduces the single-job path exactly.
+    """
+
+    def __init__(self, references, budget_w: float,
+                 objective: str = "powercentric",
+                 provision_quantile: str = "p99",
+                 min_confidence: float = 0.3, min_fraction: float = 0.1,
+                 min_spike_samples: int = 50):
+        if isinstance(references, ReferenceLibrary):
+            self.clf = references.classifier()
+        elif isinstance(references, MinosClassifier):
+            self.clf = references
+        else:
+            self.clf = MinosClassifier(list(references))
+        self.budget_w = float(budget_w)
+        self.objective = objective
+        self._gates = dict(min_confidence=min_confidence,
+                           min_fraction=min_fraction,
+                           min_spike_samples=min_spike_samples)
+        # tdp_w is only the fallback for device-less queue entries; every
+        # fleet job carries its own device
+        self.scheduler = PowerAwareScheduler(
+            self.clf, tdp_w=0.0, objective=objective,
+            quantile=provision_quantile)
+        self.jobs: dict[str, FleetJob] = {}
+        self.repacks: list[ScheduleResult] = []
+        self._dropped = 0
+
+    # -- admission -------------------------------------------------------
+    def admit(self, device: DeviceInstance, meta, chips: int = 1,
+              job_id: str | None = None) -> str:
+        """Register a job on ``device``; returns its ``job_id`` (default
+        ``"<workload>@<device>"``).  The job's builder normalizes by the
+        device's effective TDP — the device-portable frame."""
+        job_id = job_id or f"{meta.name}@{device.device_id}"
+        if job_id in self.jobs:
+            raise ValueError(f"duplicate job_id {job_id!r}")
+        actuator = SimActuator.for_device(device)
+        controller = OnlineCapController(
+            self.clf, objective=self.objective, actuator=actuator,
+            device_id=device.device_id, **self._gates)
+        self.jobs[job_id] = FleetJob(
+            job_id=job_id, device=device, chips=int(chips),
+            builder=ProfileBuilder(meta, tdp=device.effective_tdp_w),
+            controller=controller, actuator=actuator)
+        return job_id
+
+    # -- streaming -------------------------------------------------------
+    def ingest(self, fchunk: FleetChunk) -> CapDecision | None:
+        """Route one multiplexed chunk to its job.  Returns that job's
+        ``CapDecision`` when this chunk tips its confidence gate (which also
+        re-packs the fleet); ``None`` otherwise."""
+        job = self.jobs[fchunk.job_id]
+        if job.decision is not None:
+            self._dropped += 1
+            return None            # profiling already stopped for this job
+        job.builder.ingest(fchunk.chunk)
+        decision = job.controller.observe(job.builder)
+        if decision is None:
+            return None
+        self._decide(job, decision)
+        self._repack()
+        return decision
+
+    def finalize(self) -> FleetResult:
+        """Decide any still-undecided jobs from their completed profiles,
+        re-pack once more, and return the fleet outcome."""
+        pending = [j for j in self.jobs.values() if j.decision is None]
+        for job in pending:
+            self._decide(job, job.controller.finalize(job.builder))
+        if pending or not self.repacks:
+            self._repack()
+        return FleetResult(
+            decisions={j.job_id: j.decision for j in self.jobs.values()},
+            schedule=self.repacks[-1], repacks=len(self.repacks),
+            budget_w=self.budget_w, chunks_dropped=self._dropped)
+
+    def run(self, mux: FleetTelemetryMux) -> FleetResult:
+        """Pump the multiplexed feed to completion: every chunk is routed,
+        each early cap re-packs the fleet, stragglers decide at stream end."""
+        for fchunk in mux:
+            self.ingest(fchunk)
+        return self.finalize()
+
+    # -- packing ---------------------------------------------------------
+    def _decide(self, job: FleetJob, decision: CapDecision) -> None:
+        """Pin a job's decision and build its ``JobPlan`` once, straight
+        from the decision's Algorithm 1 selection — re-packs never
+        re-classify."""
+        job.decision = decision
+        job.plan = self.scheduler.plan_from_selection(
+            decision.selection, job.chips, job.device, job_id=job.job_id)
+
+    def _repack(self) -> ScheduleResult:
+        """Re-pack every decided job (admission order) into the budget."""
+        res = self.scheduler.pack(
+            (j.plan for j in self.jobs.values() if j.plan is not None),
+            budget_w=self.budget_w)
+        self.repacks.append(res)
+        return res

@@ -90,8 +90,13 @@ def main() -> None:
                         checkpoint_dir=args.ckpt_dir)
     trainer = Trainer(cfg, shape, run_cfg, topo)
     res = trainer.run(num_steps=args.steps)
-    print(f"ran {res.steps_run} steps; loss {res.losses[0]:.4f} -> "
-          f"{res.losses[-1]:.4f}; cap={actuator.get_cap():.2f}")
+    if res.steps_run:
+        print(f"ran {res.steps_run} steps; loss {res.losses[0]:.4f} -> "
+              f"{res.losses[-1]:.4f}; cap={actuator.get_cap():.2f}")
+    else:
+        # a resumed checkpoint at/past --steps leaves nothing to run
+        print(f"ran 0 steps (checkpoint already at step {res.final_step}); "
+              f"cap={actuator.get_cap():.2f}")
 
 
 if __name__ == "__main__":

@@ -49,8 +49,14 @@ def _profile_digest(p: WorkloadProfile) -> str:
 class ReferenceLibrary:
     """Ordered, versioned collection of reference ``WorkloadProfile``s."""
 
-    def __init__(self, profiles=(), bin_sizes=DEFAULT_BIN_SIZES):
+    def __init__(self, profiles=(), bin_sizes=DEFAULT_BIN_SIZES,
+                 built_on: str = ""):
         self.bin_sizes = tuple(float(c) for c in bin_sizes)
+        # provenance: the chip model the reference traces were captured on.
+        # Profiles are stored relative to that device's TDP, so one library
+        # serves a heterogeneous fleet through device-frame normalization
+        # (see repro.fleet.inventory).
+        self.built_on = built_on
         self._profiles: list[WorkloadProfile] = []
         self._spike: dict[float, np.ndarray] = {}
         self.version = 0
@@ -107,7 +113,8 @@ class ReferenceLibrary:
         """New library with the profiles for which ``keep(profile)`` holds;
         cached spike-matrix rows are carried over (no re-histogramming)."""
         mask = np.array([bool(keep(p)) for p in self._profiles])
-        out = ReferenceLibrary(bin_sizes=self.bin_sizes)
+        out = ReferenceLibrary(bin_sizes=self.bin_sizes,
+                               built_on=self.built_on)
         out._profiles = [p for p, m in zip(self._profiles, mask) if m]
         out._spike = {c: M[mask] for c, M in self._spike.items()}
         out.version = 1
@@ -199,7 +206,8 @@ class ReferenceLibrary:
         with open(os.path.join(directory, _LIBRARY_META), "w") as f:
             json.dump({"version": self.version,
                        "fingerprint": self.fingerprint(),
-                       "bin_sizes": list(self.bin_sizes)}, f, indent=1)
+                       "bin_sizes": list(self.bin_sizes),
+                       "built_on": self.built_on}, f, indent=1)
 
     @classmethod
     def load(cls, directory: str) -> "ReferenceLibrary":
@@ -233,6 +241,7 @@ class ReferenceLibrary:
             lib.version = int(lm.get("version", 1))
             lib.bin_sizes = tuple(float(c) for c in lm.get(
                 "bin_sizes", DEFAULT_BIN_SIZES))
+            lib.built_on = lm.get("built_on", "")
             if lm.get("fingerprint") == lib.fingerprint():
                 with np.load(cache_path) as cache:
                     lib._spike = {float(k[2:]): np.asarray(cache[k],
@@ -265,7 +274,8 @@ def build_reference_library(model=None, freqs=None, seed: int = 0,
     freqs = FREQ_SWEEP if freqs is None else freqs
     tdp = model.spec.tdp_w
     return ReferenceLibrary(
-        stream_profile_workload(s, model, freqs, tdp, seed=seed + i,
-                                target_duration=target_duration,
-                                chunk_samples=chunk_samples)
-        for i, s in enumerate(reference_streams()))
+        (stream_profile_workload(s, model, freqs, tdp, seed=seed + i,
+                                 target_duration=target_duration,
+                                 chunk_samples=chunk_samples)
+         for i, s in enumerate(reference_streams())),
+        built_on=model.spec.name)

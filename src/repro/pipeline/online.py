@@ -31,6 +31,7 @@ class CapDecision:
     fraction: float              # trace fraction ingested when decided
     n_samples: int
     early: bool                  # decided before the stream finished
+    device_id: str = ""          # fleet device the job runs on ("" = n/a)
 
 
 def classify_with_margin(profile: WorkloadProfile, clf: MinosClassifier,
@@ -72,7 +73,8 @@ class OnlineCapController:
     def __init__(self, references, objective: str = "powercentric",
                  actuator=None, min_confidence: float = 0.3,
                  min_fraction: float = 0.1, min_spike_samples: int = 50,
-                 bin_candidates=DEFAULT_BIN_CANDIDATES):
+                 bin_candidates=DEFAULT_BIN_CANDIDATES,
+                 device_id: str = ""):
         if isinstance(references, ReferenceLibrary):
             self.clf = references.classifier()
         elif isinstance(references, MinosClassifier):
@@ -87,6 +89,7 @@ class OnlineCapController:
         self.min_fraction = float(min_fraction)
         self.min_spike_samples = int(min_spike_samples)
         self.bin_candidates = tuple(bin_candidates)
+        self.device_id = device_id
         self.decisions: list[CapDecision] = []
 
     def _record(self, profile, builder: ProfileBuilder, sel: FreqSelection,
@@ -95,7 +98,7 @@ class OnlineCapController:
             target=profile.name, cap=sel.cap(self.objective),
             objective=self.objective, selection=sel, confidence=confidence,
             fraction=builder.fraction, n_samples=builder.n_ingested,
-            early=early)
+            early=early, device_id=self.device_id)
         self.decisions.append(decision)
         if self.actuator is not None:
             self.actuator.set_cap(decision.cap)

@@ -26,6 +26,13 @@ class SimActuator(FrequencyActuator):
     spec: ChipSpec = V5E
     _cap: float = 1.0
     history: list = field(default_factory=list)
+    device_id: str = ""          # fleet device this actuator drives
+
+    @classmethod
+    def for_device(cls, device) -> "SimActuator":
+        """Actuator bound to a fleet ``DeviceInstance``: clamps to that
+        instance's DVFS range and records which device it drives."""
+        return cls(spec=device.spec, device_id=device.device_id)
 
     def set_cap(self, freq: float) -> None:
         freq = min(max(freq, self.spec.f_min), self.spec.f_max)

@@ -1,13 +1,20 @@
 """Power-aware cluster scheduling on top of Minos predictions (paper §4.3:
 POLCA/TAPAS/PAL-style use cases).
 
-Given a pod power budget and a queue of jobs (each a WorkloadProfile from a
+Given a power budget and a queue of jobs (each a WorkloadProfile from a
 single low-cost profiling run), the scheduler:
   1. runs Algorithm 1 per job to pick a frequency cap for the objective,
-  2. estimates each job's p90 chip power at that cap from its *neighbor's*
+  2. estimates each job's per-chip power at that cap from its *neighbor's*
      scaling data (no extra profiling),
   3. packs jobs into the budget (first-fit decreasing), oversubscribing
      against nameplate TDP — the paper's motivating scenario.
+
+Heterogeneity-aware extension: queue entries may carry a fleet
+``DeviceInstance`` as a third element, in which case the neighbor's
+*relative* power quantile is converted to watts with that device's
+effective TDP (nameplate x per-chip power variability) instead of the
+scheduler-wide ``tdp_w`` — slow-silicon chips cost more budget, efficient
+ones less.  Two-element entries behave exactly as before.
 """
 from __future__ import annotations
 
@@ -22,8 +29,11 @@ class JobPlan:
     name: str
     chips: int
     cap: float
-    predicted_p90_w: float
+    predicted_p90_w: float       # per chip, at the scheduler's quantile
     selection: FreqSelection
+    device_id: str = ""          # fleet device ("" = homogeneous pod)
+    nameplate_w: float = 0.0     # per-chip TDP a non-Minos scheduler reserves
+    job_id: str = ""             # queue-entry tag ("" = keyed by name)
 
 
 @dataclass
@@ -38,34 +48,66 @@ class ScheduleResult:
 
     @property
     def nameplate_power_w(self) -> float:
-        # what a TDP-provisioned (non-Minos) scheduler would have to assume
-        return sum(j.chips for j in self.placed)
+        # what a TDP-provisioned (non-Minos) scheduler would have to reserve
+        return sum(j.nameplate_w * j.chips for j in self.placed)
+
+    @property
+    def headroom_reclaimed_w(self) -> float:
+        """Watts of provisioning headroom Minos recovers vs nameplate TDP."""
+        return self.nameplate_power_w - self.planned_power_w
 
 
 class PowerAwareScheduler:
+    """First-fit-decreasing packer over Minos per-job power predictions.
+
+    ``quantile`` selects which spike quantile of the neighbor's scaling data
+    is provisioned per chip ("p90" reproduces the original behavior; the
+    fleet controller packs at "p99" so coincident cross-job spikes stay
+    inside a shared budget).
+    """
+
     def __init__(self, clf: MinosClassifier, tdp_w: float,
-                 objective: str = "powercentric"):
+                 objective: str = "powercentric", quantile: str = "p90"):
+        if quantile not in ("p90", "p95", "p99"):
+            raise ValueError(f"unknown provisioning quantile {quantile!r}")
         self.clf = clf
         self.tdp_w = tdp_w
         self.objective = objective
+        self.quantile = quantile
 
-    def plan_job(self, profile: WorkloadProfile, chips: int) -> JobPlan:
+    def plan_job(self, profile: WorkloadProfile, chips: int,
+                 device=None) -> JobPlan:
         sel = select_optimal_freq(profile, self.clf)
+        return self.plan_from_selection(sel, chips, device)
+
+    def plan_from_selection(self, sel: FreqSelection, chips: int,
+                            device=None, job_id: str = "") -> JobPlan:
+        """Build a ``JobPlan`` from an already-made Algorithm 1 selection —
+        the fleet controller's path: a job's online ``CapDecision`` carries
+        the selection, so re-packing never re-classifies."""
         cap = sel.cap(self.objective)
         neighbor = next(r for r in self.clf.references
                         if r.name == sel.power_neighbor)
         # nearest available frequency in the neighbor's scaling data
         f = min(neighbor.scaling, key=lambda x: abs(x - cap))
-        p90_rel = neighbor.scaling[f].p90
-        return JobPlan(profile.name, chips, cap, p90_rel * self.tdp_w, sel)
+        rel = getattr(neighbor.scaling[f], self.quantile)
+        if device is None:
+            watts_base, nameplate, did = self.tdp_w, self.tdp_w, ""
+        else:
+            watts_base = device.effective_tdp_w
+            nameplate = device.nameplate_w
+            did = device.device_id
+        return JobPlan(sel.target, chips, cap, rel * watts_base, sel,
+                       device_id=did, nameplate_w=nameplate, job_id=job_id)
 
-    def schedule(self, jobs: list[tuple[WorkloadProfile, int]],
-                 budget_w: float) -> ScheduleResult:
-        # first-fit decreasing with a deterministic tie-break: equal-power
-        # jobs pack in name order regardless of queue order (repacking the
-        # same queue must always produce the same placement)
-        plans = sorted((self.plan_job(p, c) for p, c in jobs),
-                       key=lambda j: (-j.predicted_p90_w * j.chips, j.name))
+    def pack(self, plans, budget_w: float) -> ScheduleResult:
+        """First-fit-decreasing over prebuilt ``JobPlan``s with a
+        deterministic tie-break: equal-power jobs pack in (name, device,
+        job) order regardless of queue order (repacking the same queue must
+        always produce the same placement)."""
+        plans = sorted(plans,
+                       key=lambda j: (-j.predicted_p90_w * j.chips, j.name,
+                                      j.device_id, j.job_id))
         res = ScheduleResult(budget_w=budget_w)
         used = 0.0
         for plan in plans:
@@ -76,3 +118,8 @@ class PowerAwareScheduler:
             else:
                 res.deferred.append(plan.name)
         return res
+
+    def schedule(self, jobs, budget_w: float) -> ScheduleResult:
+        """Plan and pack ``jobs`` — ``(profile, chips)`` or ``(profile,
+        chips, device)`` tuples — into ``budget_w``."""
+        return self.pack((self.plan_job(*job) for job in jobs), budget_w)

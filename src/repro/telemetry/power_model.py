@@ -9,6 +9,12 @@ Physically-grounded structure:
   * low->high activity transitions overshoot (di/dt inrush): amplitude
     proportional to the power step, clipped at the OCP 2x TDP excursion
     ceiling, decaying over ~1 ms — these are the paper's "power spikes".
+
+The model is fully parameterized by its ``ChipSpec``: per-model constants
+(TDP, idle, DVFS range) *and* per-instance variability (``perf_scale``
+scales achievable compute/bandwidth, ``power_scale`` scales drawn power).
+At the default scales of exactly 1.0 every multiplication is an IEEE
+identity, so a nominal chip is bit-exact with the pre-fleet model.
 """
 from __future__ import annotations
 
@@ -51,8 +57,8 @@ class TPUPowerModel:
     def exec_kernel(self, k: Kernel, f: float) -> KernelExec:
         s = self.spec
         f = min(max(f, s.f_min), s.f_max)
-        fc = s.peak_flops_bf16 * (f / s.f_max) * self.mxu_eff
-        bm = s.hbm_bw * self.hbm_eff          # memory clock not SM-capped
+        fc = s.peak_flops_bf16 * (f / s.f_max) * self.mxu_eff * s.perf_scale
+        bm = s.hbm_bw * self.hbm_eff * s.perf_scale   # memory clock not SM-capped
         t_c = k.flops / fc if k.flops else 0.0
         t_m = k.bytes / bm if k.bytes else 0.0
         t = max(t_c, t_m, T_LAUNCH)
@@ -66,10 +72,19 @@ class TPUPowerModel:
         v = s.voltage(f)
         return (s.idle_w
                 + self.A_c * util_c * (f / s.f_max) * v * v
-                + self.A_m * util_m)
+                + self.A_m * util_m) * s.power_scale
 
     def overshoot(self, p_prev: float, p_new: float) -> float | None:
-        """Excursion amplitude for a low->high transition (None if none)."""
+        """Excursion amplitude for a low->high transition (None if none).
+
+        The ceiling is deliberately the *nameplate* OCP limit
+        (``max_excursion * tdp_w``), not scaled by ``power_scale``: it
+        models the platform's power-delivery spec, which doesn't move with
+        the silicon lottery.  Consequence: on a far-off-nominal chip,
+        effective-TDP normalization recovers the intrinsic relative curve
+        exactly for steady power but only approximately for
+        ceiling-clipped spikes — the fleet's device-portability tests
+        bound the effect."""
         step = p_new - p_prev
         if step < OVERSHOOT_MIN_STEP:
             return None
@@ -78,4 +93,4 @@ class TPUPowerModel:
 
     @property
     def idle_w(self) -> float:
-        return self.spec.idle_w
+        return self.spec.idle_w * self.spec.power_scale

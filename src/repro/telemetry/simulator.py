@@ -75,6 +75,7 @@ class TraceMeta:
     app_sm_util: float
     app_dram_util: float
     kernel_rows: list = field(default_factory=list)
+    device_id: str = ""          # originating fleet device ("" = unspecified)
 
 
 @dataclass
@@ -208,7 +209,8 @@ def simulate(stream: KernelStream, freq: float, model: TPUPowerModel,
 def stream_telemetry(stream: KernelStream, freq: float, model: TPUPowerModel,
                      sample_dt: float = 1e-3, target_duration: float = 4.0,
                      max_iterations: int = 2000, noise: float = 0.03,
-                     seed: int = 0, chunk_samples: int = 256):
+                     seed: int = 0, chunk_samples: int = 256,
+                     device_id: str = ""):
     """Streaming twin of ``simulate``: ``(meta, chunk_iterator)``.
 
     The iterator yields ``TelemetryChunk``s of cumulative counter readings —
@@ -229,7 +231,7 @@ def stream_telemetry(stream: KernelStream, freq: float, model: TPUPowerModel,
                      sample_dt=sample_dt, n_samples=ev.n_samples,
                      exec_time=ev.exec_time, app_sm_util=ev.app_sm_util,
                      app_dram_util=ev.app_dram_util,
-                     kernel_rows=ev.kernel_rows)
+                     kernel_rows=ev.kernel_rows, device_id=device_id)
 
     def chunks():
         for i in range(0, ev.n_samples, chunk_samples):

@@ -10,7 +10,9 @@ Held-out (never in the reference set; used for the §7.1 case study):
 """
 from __future__ import annotations
 
-from repro.analysis.hardware import FREQ_SWEEP, V5E
+import numpy as np
+
+from repro.analysis.hardware import FREQ_SWEEP
 from repro.configs import ARCHS, SHAPES
 from repro.telemetry import kernel_stream as kstream
 from repro.telemetry.power_model import TPUPowerModel
@@ -61,6 +63,38 @@ def holdout_streams(n_chips: int = 256) -> list[kstream.KernelStream]:
     out = [kstream.build_stream(ARCHS[a], SHAPES[s], n_chips)
            for a, s in _HOLDOUT_CELLS]
     out.append(kstream.micro_vector_search())
+    return out
+
+
+def _mix_weight(name: str) -> int:
+    """Sampling weight of a zoo stream in the fleet job mix.  Production
+    accelerator fleets are dominated by serving traffic (arXiv:2502.18680),
+    so decode cells are drawn 4x as often as training, prefill/long-context
+    and the HPC microbenchmarks 2x."""
+    if ":decode" in name:
+        return 4
+    if ":prefill" in name or ":long" in name:
+        return 2
+    if ":" not in name:          # microbenchmarks / HPC analogues
+        return 2
+    return 1                     # train cells
+
+
+def fleet_job_mix(n_jobs: int, seed: int = 0,
+                  chips_choices=(32, 64, 128, 256)
+                  ) -> list[tuple[kstream.KernelStream, int]]:
+    """A deterministic mix of ``(kernel stream, chip count)`` jobs for fleet
+    simulations, sampled (seeded, serving-weighted — see ``_mix_weight``)
+    from the reference + holdout zoos — the arrival queue used by
+    ``benchmarks/bench_fleet.py`` and the fleet example."""
+    rng = np.random.default_rng(seed)
+    pool = [s for s in reference_streams() + holdout_streams()
+            for _ in range(_mix_weight(s.name))]
+    out = []
+    for _ in range(n_jobs):
+        stream = pool[int(rng.integers(len(pool)))]
+        out.append((stream, int(chips_choices[int(
+            rng.integers(len(chips_choices)))])))
     return out
 
 

@@ -1,9 +1,14 @@
 """Serving engine + Minos-driven power scheduler."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
+from repro.analysis.hardware import V5E
 from repro.configs import ARCHS
+from repro.fleet import DeviceInstance
 from repro.models.common import SMOKE_TOPO
 from repro.serve import ServeEngine
 from repro.core.classify import FreqPoint, MinosClassifier, WorkloadProfile
@@ -85,3 +90,82 @@ def test_ffd_tie_break_is_deterministic_by_name():
         res2 = sched.schedule([jobs[i] for i in perm], budget_w=budget)
         assert [j.name for j in res2.placed] == [j.name for j in res.placed]
         assert res2.deferred == res.deferred
+
+
+def _zoo_scheduler(quantile="p90"):
+    refs = [_ref("hot", 1.4, 0.95, 0.1), _ref("cool", 0.7, 0.1, 0.9)]
+    return PowerAwareScheduler(MinosClassifier(refs), tdp_w=TDP,
+                               objective="powercentric", quantile=quantile)
+
+
+def test_zero_budget_defers_everything():
+    sched = _zoo_scheduler()
+    jobs = [(_ref("job-hot", 1.38, 0.93, 0.12), 16),
+            (_ref("job-cool", 0.72, 0.12, 0.88), 16)]
+    for budget in (0.0, -5.0):
+        res = sched.schedule(jobs, budget_w=budget)
+        assert res.placed == []
+        assert sorted(res.deferred) == ["job-cool", "job-hot"]
+        assert res.planned_power_w == 0.0
+        assert res.nameplate_power_w == 0.0
+        assert res.headroom_reclaimed_w == 0.0
+
+
+def test_insufficient_budget_defers_all_and_empty_queue_is_empty():
+    sched = _zoo_scheduler()
+    jobs = [(_ref("job-hot", 1.38, 0.93, 0.12), 16),
+            (_ref("job-cool", 0.72, 0.12, 0.88), 16)]
+    # smaller than the smallest single job's need: nothing can ever fit
+    res = sched.schedule(jobs, budget_w=1.0)
+    assert res.placed == [] and len(res.deferred) == 2
+    empty = sched.schedule([], budget_w=1e9)
+    assert empty.placed == [] and empty.deferred == []
+
+
+def test_scheduler_rejects_unknown_quantile():
+    with pytest.raises(ValueError, match="quantile"):
+        _zoo_scheduler(quantile="p50")
+
+
+def test_heterogeneous_jobs_cost_their_devices_effective_tdp():
+    sched = _zoo_scheduler()
+    prof = _ref("job-cool", 0.72, 0.12, 0.88)
+    weak = DeviceInstance("v5e/bad", "tpu-v5e",
+                          dataclasses.replace(V5E, power_scale=1.25))
+    plan_pod = sched.plan_job(prof, 4)
+    plan_dev = sched.plan_job(prof, 4, weak)
+    assert plan_dev.cap == plan_pod.cap
+    assert plan_dev.device_id == "v5e/bad"
+    assert plan_dev.nameplate_w == V5E.tdp_w
+    assert plan_dev.predicted_p90_w == pytest.approx(
+        1.25 * plan_pod.predicted_p90_w)
+    # an inefficient chip eats part of the reclaimed headroom
+    res_dev = sched.schedule([(prof, 4, weak)], budget_w=1e9)
+    res_pod = sched.schedule([(prof, 4)], budget_w=1e9)
+    assert 0 < res_dev.headroom_reclaimed_w < res_pod.headroom_reclaimed_w
+
+
+@given(st.lists(st.sampled_from(["job-hot", "job-cool", "job-mid"]),
+                min_size=0, max_size=6),
+       st.integers(min_value=1, max_value=64),
+       st.floats(min_value=0.0, max_value=1e6))
+@settings(max_examples=40, deadline=None)
+def test_fleet_plan_never_exceeds_budget(names, chips, budget):
+    """Property (ISSUE 3): whatever the queue, chip counts, budget, or
+    device variability, a schedule's planned power never exceeds its
+    budget, and every job lands in exactly one of placed/deferred."""
+    sched = _zoo_scheduler()
+    levels = {"job-hot": (1.38, 0.93, 0.12), "job-cool": (0.72, 0.12, 0.88),
+              "job-mid": (1.05, 0.5, 0.5)}
+    jobs = []
+    for i, name in enumerate(names):
+        lvl, sm, dram = levels[name]
+        dev = DeviceInstance(
+            f"dev/{i}", "tpu-v5e",
+            dataclasses.replace(V5E, power_scale=0.8 + 0.05 * i))
+        jobs.append((_ref(f"{name}-{i}", lvl, sm, dram), chips, dev))
+    res = sched.schedule(jobs, budget_w=budget)
+    assert res.planned_power_w <= budget
+    assert len(res.placed) + len(res.deferred) == len(jobs)
+    assert {j.name for j in res.placed} | set(res.deferred) == \
+        {p.name for p, _, _ in jobs}
