@@ -2,13 +2,13 @@
 provisioning headroom on a heterogeneous variability-aware pod.
 
 A seeded ``DeviceInventory`` (three chip generations, per-device silicon
-variability) runs a seeded job mix; every job streams its one low-cost
-profiling run through the ``FleetTelemetryMux`` into the
-``FleetCapController``, which caps early per job and re-packs the shared
-power budget on every decision.  The resulting placement is then validated
-against ground truth: each placed job is re-simulated *at its cap on its
-device* and the time-aligned aggregate fleet power is checked against the
-budget.
+variability) runs a seeded job mix through one ``repro.api.MinosSession``:
+every job is a ``submit`` of its single low-cost profiling run, and
+``session.run()`` multiplexes the telemetry, caps early per job, and
+re-packs the shared power budget on every decision.  The resulting
+placement is then validated against ground truth: each placed job is
+re-simulated *at its cap on its device* and the time-aligned aggregate
+fleet power is checked against the budget.
 
 Emits one ``emit()`` row and writes ``results/fleet.json``:
   * ``jobs_per_s``          — classification throughput of the fleet feed;
@@ -29,14 +29,11 @@ import time
 import numpy as np
 
 from benchmarks.common import RESULTS, emit, reference_library
-from repro.fleet import (DeviceInventory, FleetCapController,
-                         FleetTelemetryMux, VariabilityModel)
-from repro.pipeline import ReferenceLibrary, stream_profile_workload
-from repro.telemetry import TPUPowerModel, simulate, stream_telemetry
-from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
-                                           micro_spmv_compute,
-                                           micro_spmv_memory, micro_stencil)
-from repro.telemetry.workloads import fleet_job_mix
+from repro.api import (DeviceInventory, MinosSession, ReferenceLibrary,
+                       TPUPowerModel, VariabilityModel, fleet_job_mix,
+                       micro_gemm, micro_idle_burst, micro_spmv_compute,
+                       micro_spmv_memory, micro_stencil, simulate,
+                       stream_profile_workload)
 
 SUSTAIN_WINDOW = 50              # samples (~50 ms at 1 kHz) for the rolling mean
 BUDGET_FRACTION = 0.75           # of nameplate: the oversubscription target
@@ -76,21 +73,16 @@ def run(smoke: bool = False) -> dict:
     nameplate = sum(chips * dev.nameplate_w for _, chips, dev in assigned)
     budget = BUDGET_FRACTION * nameplate
 
-    fleet = FleetCapController(lib, budget_w=budget,
-                               objective="powercentric",
-                               min_confidence=0.2)
-    mux = FleetTelemetryMux()
+    session = MinosSession(lib, inventory=inventory, budget_w=budget,
+                           objective="powercentric", quantile="p99",
+                           min_confidence=0.2)
     for i, (stream, chips, dev) in enumerate(assigned):
-        meta, chunks = stream_telemetry(stream, 1.0, dev.power_model(),
-                                        seed=500 + i,
-                                        target_duration=target_duration,
-                                        device_id=dev.device_id)
-        job_id = fleet.admit(dev, meta, chips,
-                             job_id=f"j{i:02d}:{stream.name}")
-        mux.add_job(job_id, meta, chunks)
+        session.submit(stream, device=dev, chips=chips,
+                       job_id=f"j{i:02d}:{stream.name}", seed=500 + i,
+                       target_duration=target_duration)
 
     t0 = time.perf_counter()
-    result = fleet.run(mux)
+    report = session.run()
     elapsed = time.perf_counter() - t0
     jobs_per_s = len(assigned) / elapsed
 
@@ -98,7 +90,7 @@ def run(smoke: bool = False) -> dict:
     # sum the time-aligned per-chip traces, and check sustained power.
     # Plans carry the exact job_id, so matching is unambiguous even when
     # the with-replacement mix repeats a workload on a device.
-    placed = {p.job_id: p for p in result.schedule.placed}
+    placed = {p.job_id: p for p in report.schedule.placed}
     traces = []
     for i, (stream, chips, dev) in enumerate(assigned):
         plan = placed.pop(f"j{i:02d}:{stream.name}", None)
@@ -127,17 +119,17 @@ def run(smoke: bool = False) -> dict:
             "n_jobs": len(assigned),
             "budget_w": round(budget, 1),
             "budget_fraction_of_nameplate": BUDGET_FRACTION,
-            "provision_quantile": fleet.scheduler.quantile,
+            "provision_quantile": report.quantile,
         },
         "jobs_per_s": round(jobs_per_s, 2),
-        "early_decisions": result.early_decisions,
-        "repacks": result.repacks,
-        "chunks_dropped": result.chunks_dropped,
-        "placed": len(result.schedule.placed),
-        "deferred": len(result.schedule.deferred),
-        "planned_power_w": round(result.schedule.planned_power_w, 1),
-        "nameplate_power_w": round(result.schedule.nameplate_power_w, 1),
-        "headroom_reclaimed_w": round(result.schedule.headroom_reclaimed_w, 1),
+        "early_decisions": report.early_decisions,
+        "repacks": report.repacks,
+        "chunks_dropped": report.chunks_dropped,
+        "placed": len(report.schedule.placed),
+        "deferred": len(report.schedule.deferred),
+        "planned_power_w": round(report.schedule.planned_power_w, 1),
+        "nameplate_power_w": round(report.schedule.nameplate_power_w, 1),
+        "headroom_reclaimed_w": round(report.schedule.headroom_reclaimed_w, 1),
         "budget_violations": violations,
         "peak_sustained_w": round(float(sustained.max()), 1),
         "peak_instant_w": round(float(aggregate.max()), 1),
@@ -146,7 +138,7 @@ def run(smoke: bool = False) -> dict:
                      "fraction": round(d.fraction, 3),
                      "device": d.device_id,
                      "neighbor": d.selection.power_neighbor}
-            for job_id, d in sorted(result.decisions.items())
+            for job_id, d in sorted(report.decisions.items())
         },
     }
     os.makedirs(RESULTS, exist_ok=True)

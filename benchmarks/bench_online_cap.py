@@ -1,13 +1,14 @@
 """Online capping convergence: how much of a profiling trace does the
 pipeline need before its cap decision matches the full-profile one?
 
-For every zoo workload, the single uncapped profiling run is streamed
-through a ``ProfileBuilder`` (hold-one-out against the shipped reference
-library); at each trace-fraction checkpoint the partial profile is pushed
-through Algorithm 1 and the chosen cap is compared with the decision from
-the completed profile.  A second track runs the ``OnlineCapController``'s
-confidence gate on the same stream, recording where it would have stopped
-profiling and whether that early call was right.
+For every zoo workload, the single uncapped profiling run is submitted to a
+``repro.api.MinosSession`` (hold-one-out against the shipped reference
+library) and fed chunk by chunk with ``profile_to_completion`` on; at each
+trace-fraction checkpoint the partial profile (``JobHandle.snapshot``) is
+pushed through Algorithm 1 and the chosen cap is compared with the decision
+from the completed profile.  The session's confidence gate rides along on
+the same feed, recording where it would have stopped profiling and whether
+that early call was right.
 
 Emits one ``emit()`` row and writes ``results/online_cap.json``:
   * ``agreement_curve`` — fraction-of-trace -> share of workloads whose
@@ -27,14 +28,11 @@ import time
 import numpy as np
 
 from benchmarks.common import RESULTS, emit, reference_library
-from repro.core.algorithm1 import select_optimal_freq
-from repro.pipeline import (OnlineCapController, ProfileBuilder,
-                            ReferenceLibrary, stream_profile_workload)
-from repro.telemetry import TPUPowerModel, stream_telemetry
-from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
-                                           micro_spmv_compute,
-                                           micro_spmv_memory, micro_stencil)
-from repro.telemetry.workloads import reference_streams
+from repro.api import (MinosSession, ReferenceLibrary, TPUPowerModel,
+                       micro_gemm, micro_idle_burst, micro_spmv_compute,
+                       micro_spmv_memory, micro_stencil, reference_streams,
+                       select_optimal_freq, stream_profile_workload,
+                       stream_telemetry)
 
 FRACTIONS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0)
 
@@ -59,7 +57,13 @@ def run(smoke: bool = False) -> dict:
         streams = reference_streams()
         lib = reference_library()
         target_duration = 4.0
-    clf = lib.classifier()
+
+    # one session serves every target: the confidence gate (powercentric)
+    # rides along on each feed, while the checkpoint classification below
+    # hits the same shared warm classifier
+    session = MinosSession(lib, objective="powercentric", actuator="none",
+                           min_confidence=0.2)
+    clf = session.classifier
 
     rows = []
     agree = {obj: {f: 0 for f in FRACTIONS}
@@ -67,23 +71,18 @@ def run(smoke: bool = False) -> dict:
     for i, stream in enumerate(streams):
         meta, chunks = stream_telemetry(stream, 1.0, model, seed=1000 + i,
                                         target_duration=target_duration)
-        builder = ProfileBuilder(meta, tdp)
-        # the controller's confidence gate rides along on the same stream
-        controller = OnlineCapController(clf, objective="powercentric",
-                                         min_confidence=0.2)
-        gate_decision = None
+        job = session.submit(meta, profile_to_completion=True)
         partial = {}
         next_f = 0
         for chunk in chunks:
-            builder.ingest(chunk)
-            if gate_decision is None:
-                gate_decision = controller.observe(builder)
+            job.feed(chunk)
             while next_f < len(FRACTIONS) and \
-                    builder.fraction >= FRACTIONS[next_f] - 1e-12:
-                sel = select_optimal_freq(builder.snapshot(), clf)
+                    job.fraction >= FRACTIONS[next_f] - 1e-12:
+                sel = select_optimal_freq(job.snapshot(), clf)
                 partial[FRACTIONS[next_f]] = _caps(sel)
                 next_f += 1
-        final_sel = select_optimal_freq(builder.finalize(), clf)
+        gate_decision = job.decision(finalize=False)
+        final_sel = select_optimal_freq(job.profile(), clf)
         final = _caps(final_sel)
         for f in FRACTIONS[next_f:]:
             partial[f] = final

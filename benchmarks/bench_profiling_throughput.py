@@ -40,7 +40,8 @@ from repro.telemetry.kernel_stream import (build_stream, micro_gemm,
                                            micro_idle_burst,
                                            micro_spmv_compute,
                                            micro_spmv_memory, micro_stencil)
-from repro.telemetry.simulator import profile_workload
+from repro.core import spikes as spk
+from repro.core.classify import FreqPoint
 
 
 def _streams(smoke: bool):
@@ -54,24 +55,42 @@ def _streams(smoke: bool):
     return out
 
 
-def _build_library(simulate_fn, streams, freqs, target_duration, seed=0):
-    """Reference-library build (profile_workload's sweep loop) on top of a
-    pluggable simulate, so before/after share every non-measured line."""
-    import repro.telemetry.simulator as sim_mod
+def _sweep_profile(stream, model, freqs, tdp, simulate_fn, seed,
+                   target_duration):
+    """The batch reference sweep (the pre-PR-4 ``profile_workload`` body) on
+    top of a pluggable simulate, so before/after share every non-measured
+    line.  (The public ``profile_workload`` now routes through the streaming
+    builder and no longer calls ``simulate``, so the seed-vs-vectorized
+    integration comparison keeps its own sweep loop.)"""
+    scaling = {}
+    top = max(freqs)
+    top_trace = None
+    for i, f in enumerate(sorted(freqs)):
+        tr = simulate_fn(stream, f, model, seed=seed * 1009 + i,
+                         target_duration=target_duration)
+        scaling[f] = FreqPoint(
+            freq=f, p90=spk.p_quantile(tr.power_filtered, tdp, 90),
+            p95=spk.p_quantile(tr.power_filtered, tdp, 95),
+            p99=spk.p_quantile(tr.power_filtered, tdp, 99),
+            mean_power=spk.mean_power_rel(tr.power_filtered, tdp),
+            exec_time=tr.exec_time,
+            spike_vec=spk.spike_vector(tr.power_filtered, tdp),
+        )
+        if f == top:
+            top_trace = tr
+    return WorkloadProfile(
+        name=stream.name, tdp=tdp, power_trace=top_trace.power_filtered,
+        sm_util=top_trace.app_sm_util, dram_util=top_trace.app_dram_util,
+        exec_time=top_trace.exec_time, scaling=scaling, domain=stream.domain)
 
+
+def _build_library(simulate_fn, streams, freqs, target_duration, seed=0):
+    """Reference-library build: the sweep loop over a pluggable simulate."""
     model = TPUPowerModel()
     tdp = model.spec.tdp_w
-    profiles = []
-    orig = sim_mod.simulate
-    sim_mod.simulate = simulate_fn
-    try:
-        for i, stream in enumerate(streams):
-            profiles.append(profile_workload(
-                stream, model, freqs, tdp, seed=seed + i,
-                target_duration=target_duration))
-    finally:
-        sim_mod.simulate = orig
-    return profiles
+    return [_sweep_profile(stream, model, freqs, tdp, simulate_fn,
+                           seed + i, target_duration)
+            for i, stream in enumerate(streams)]
 
 
 def _library_scale(refs: list[WorkloadProfile],

@@ -1,28 +1,36 @@
 """Fleet what-if: admit a job mix onto a heterogeneous, variability-aware
 pod under a shared power budget (the paper's POLCA-style oversubscription
-use case, §4.3 — now cluster-wide).
+use case, §4.3 — now cluster-wide), all through the declarative
+``MinosSession`` facade.
 
     PYTHONPATH=src:. python examples/fleet_power_planner.py
 
-The fleet API path end to end: a seeded ``DeviceInventory`` (two chip
-generations, per-device silicon variability), every job's single uncapped
-profiling run multiplexed through ``FleetTelemetryMux``, and a
-``FleetCapController`` that caps each job early on its own device and
-re-packs the pod (heterogeneity-aware first-fit-decreasing) the moment any
-cap lands.  The single shipped reference library — built on the nominal
-v5e — serves every device through effective-TDP normalization.
+``MinosSession.from_config`` builds the whole session from one dict — the
+persisted reference store (warm classifier), a seeded ``DeviceInventory``
+(two chip generations, per-device silicon variability), and the policy
+names.  Every job's single uncapped profiling run is then one ``submit``;
+``session.run()`` multiplexes the telemetry, caps each job early on its own
+device, and re-packs the pod (heterogeneity-aware first-fit-decreasing) the
+moment any cap lands.  The single shipped reference library — built on the
+nominal v5e — serves every device through effective-TDP normalization.
 """
-from benchmarks.common import reference_library
-from repro.fleet import (DeviceInventory, FleetCapController,
-                         FleetTelemetryMux, VariabilityModel)
-from repro.telemetry import stream_telemetry
-from repro.telemetry.workloads import holdout_streams, reference_streams
+from benchmarks.common import STORE, reference_library
+from repro.api import MinosSession, holdout_streams, reference_streams
 
 
 def main() -> None:
-    lib = reference_library()
-    inventory = DeviceInventory.generate({"tpu-v5e": 4, "tpu-v5p": 2},
-                                         VariabilityModel(), seed=3)
+    lib = reference_library()      # ensures the on-disk store exists
+    session = MinosSession.from_config({
+        "library": STORE,
+        "devices": {"tpu-v5e": 4, "tpu-v5p": 2},
+        "variability": {},         # published default sigmas
+        "seed": 3,
+        "objective": "powercentric",
+        "actuator": "sim",
+        "quantile": "p99",
+        "gates": {"min_confidence": 0.2},
+    })
+    inventory = session.inventory
     print(f"fleet: {len(inventory)} devices "
           f"({', '.join(inventory.models)}; built_on={lib.built_on!r})")
     for d in inventory:
@@ -31,7 +39,6 @@ def main() -> None:
               f"eff-TDP {d.effective_tdp_w:5.1f} W")
 
     # a queue of jobs, round-robined onto devices
-    streams = {s.name: s for s in reference_streams() + holdout_streams()}
     queue = [
         ("command-r-35b:train_4k", 256),
         ("deepseek-v2-236b:decode_32k", 256),
@@ -41,35 +48,31 @@ def main() -> None:
     ]
     nameplate = sum(chips * inventory[i % len(inventory)].nameplate_w
                     for i, (_, chips) in enumerate(queue))
-    budget = 0.75 * nameplate   # an oversubscribed pod
+    budget = 0.75 * nameplate      # an oversubscribed pod
+    session.set_budget(budget)
     print(f"\npod: {sum(c for _, c in queue)} chips, nameplate "
           f"{nameplate / 1e3:.0f} kW, budget {budget / 1e3:.0f} kW "
           f"(75% oversubscription)")
 
-    fleet = FleetCapController(lib, budget_w=budget,
-                               objective="powercentric", min_confidence=0.2)
-    mux = FleetTelemetryMux()
+    streams = {s.name: s for s in reference_streams() + holdout_streams()}
     for i, (name, chips) in enumerate(queue):
-        device = inventory[i % len(inventory)]
-        meta, chunks = stream_telemetry(streams[name], 1.0,
-                                        device.power_model(), seed=i,
-                                        device_id=device.device_id)
-        mux.add_job(fleet.admit(device, meta, chips), meta, chunks)
+        session.submit(streams[name], device=inventory[i % len(inventory)],
+                       chips=chips, seed=i)
 
-    result = fleet.run(mux)
-    print(f"\nmultiplexed run: {result.early_decisions}/{len(queue)} jobs "
-          f"capped early, {result.repacks} re-packs, "
-          f"{result.chunks_dropped} telemetry chunks saved")
-    for job_id, d in result.decisions.items():
+    report = session.run()
+    print(f"\nmultiplexed run: {report.early_decisions}/{len(queue)} jobs "
+          f"capped early, {report.repacks} re-packs, "
+          f"{report.chunks_dropped} telemetry chunks saved")
+    for job_id, d in report.decisions.items():
         when = f"{d.fraction:4.0%} of trace" if d.early else "full trace"
         print(f"  {job_id:48s} cap=f{d.cap:.2f} ({when})")
 
-    res = result.schedule
+    res = report.schedule
     print(f"\nfinal packing: {len(res.placed)} jobs placed, "
           f"{len(res.deferred)} deferred:")
     for j in res.placed:
         print(f"  {j.name:36s} chips={j.chips:4d} cap=f{j.cap:.2f} "
-              f"{fleet.scheduler.quantile}={j.predicted_p90_w:5.0f} W/chip "
+              f"{report.quantile}={j.predicted_p90_w:5.0f} W/chip "
               f"on {j.device_id} (neighbor: {j.selection.power_neighbor})")
     for name in res.deferred:
         print(f"  deferred: {name}")

@@ -1,25 +1,22 @@
 """Quickstart: classify a never-before-seen workload and pick its frequency
-cap with the Minos streaming pipeline — end to end in under a minute on CPU.
+cap through the ``MinosSession`` facade — end to end in under a minute on
+CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 
-The pipeline front door, in order:
+The facade, in order:
   1. ``stream_profile_workload``  -> a small versioned ``ReferenceLibrary``
-  2. ``stream_telemetry`` + ``ProfileBuilder``  -> the new workload's one
-     low-cost profile, ingested chunk by chunk
-  3. ``OnlineCapController``  -> Algorithm 1 on the *partial* profile, with
-     the cap issued as soon as the distance-margin confidence clears
+  2. ``MinosSession.submit``  -> the new workload's one low-cost profiling
+     run, streamed chunk by chunk on the session's device
+  3. ``JobHandle.run``  -> Algorithm 1 on the *partial* profile, the cap
+     issued (and actuated) as soon as the distance-margin confidence clears
 """
-from repro.pipeline import (OnlineCapController, ProfileBuilder,
-                            ReferenceLibrary, stream_profile_workload)
-from repro.core.algorithm1 import profiling_savings, select_optimal_freq
-from repro.fleet import DeviceInventory, VariabilityModel
-from repro.sched import SimActuator
-from repro.telemetry import TPUPowerModel, profile_workload, stream_telemetry
-from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
-                                           micro_spmv_compute,
-                                           micro_spmv_memory, micro_stencil,
-                                           micro_vector_search)
+from repro.api import (DeviceInventory, MinosSession, ReferenceLibrary,
+                       TPUPowerModel, VariabilityModel, micro_gemm,
+                       micro_idle_burst, micro_spmv_compute,
+                       micro_spmv_memory, micro_stencil, micro_vector_search,
+                       profiling_savings, select_optimal_freq,
+                       stream_profile_workload)
 
 
 def main() -> None:
@@ -38,24 +35,15 @@ def main() -> None:
                                micro_stencil()]))
     print(f"  library v{lib.version}: {', '.join(lib.names)}")
 
-    # 2. a NEW workload arrives: stream its ONE low-cost profiling run
-    #    through the builder, watching for an early cap decision
-    actuator = SimActuator()
-    controller = OnlineCapController(lib, objective="powercentric",
-                                     actuator=actuator, min_confidence=0.2)
-    meta, chunks = stream_telemetry(micro_vector_search(), 1.0, model,
-                                    seed=99)
-    builder = ProfileBuilder(meta, tdp)
-    decision = None
-    for chunk in chunks:
-        builder.ingest(chunk)
-        decision = controller.observe(builder)
-        if decision is not None:
-            break
-    if decision is None:
-        decision = controller.finalize(builder)
-    target = builder.snapshot() if decision.early else builder.finalize()
-    print(f"\nnew workload: {meta.name}")
+    # 2. a NEW workload arrives: one session owns the library, the device,
+    #    and the policies; submit attaches the job's single low-cost
+    #    profiling run and run() pumps it to the first confident decision
+    session = MinosSession(lib, objective="powercentric", actuator="sim",
+                           min_confidence=0.2)
+    job = session.submit(micro_vector_search(), seed=99)
+    decision = job.run()           # profiling stops at the early cap
+    target = job.snapshot() if decision.early else job.profile()
+    print(f"\nnew workload: {job.meta.name} (on {job.device.device_id})")
     print(f"  p90 power     : {target.p_quantile(90):.2f} x TDP")
     print(f"  mxu/hbm util  : {target.sm_util:.2f} / {target.dram_util:.2f}")
 
@@ -72,11 +60,11 @@ def main() -> None:
           f"(euclid d={sel.util_distance:.3f})")
     print(f"  PowerCentric cap: f={sel.f_pwr:.2f}  (p90 spikes < 1.3 x TDP)")
     print(f"  PerfCentric cap : f={sel.f_perf:.2f} (perf loss < 5%)")
-    print(f"  actuator now at : f={actuator.get_cap():.2f}")
+    print(f"  actuator now at : f={job.actuator.get_cap():.2f}")
 
     # 4. validate against ground truth the classifier never saw
-    truth = profile_workload(micro_vector_search(), model, freqs, tdp,
-                             seed=99)
+    truth = stream_profile_workload(micro_vector_search(), model, freqs, tdp,
+                                    seed=99)
     obs = truth.scaling[sel.f_pwr].p90
     print(f"\nvalidation (simulator ground truth):")
     print(f"  observed p90 at cap {sel.f_pwr:.2f}: {obs:.2f} x TDP "
@@ -84,21 +72,18 @@ def main() -> None:
     print(f"  profiling time saved vs full sweep: "
           f"{profiling_savings(truth, list(freqs)):.0%}")
 
-    # 5. device portability: the SAME library serves a chip that lost the
-    #    silicon lottery — stream the workload through that device's
-    #    perturbed power model and normalize by its *effective* TDP
+    # 5. device portability: the SAME session library serves a chip that
+    #    lost the silicon lottery — submit on that device and the builder
+    #    normalizes by its *effective* TDP automatically
     device = DeviceInventory.generate(
         1, VariabilityModel(sigma_power=0.10), seed=13)[0]
-    meta_d, chunks_d = stream_telemetry(micro_vector_search(), 1.0,
-                                        device.power_model(), seed=99,
-                                        device_id=device.device_id)
-    builder_d = ProfileBuilder(meta_d, device.spec.effective_tdp_w)
-    for chunk in chunks_d:
-        builder_d.ingest(chunk)
-    sel_dev = select_optimal_freq(builder_d.finalize(), lib.classifier())
-    # apples to apples: the nominal baseline is the FULL-trace selection
-    # (truth, from step 4), not the early partial-profile decision
-    sel_full = select_optimal_freq(truth, lib.classifier())
+    job_d = session.submit(micro_vector_search(), device=device, seed=99,
+                           job_id="vector-search@lottery-loser",
+                           profile_to_completion=True)
+    job_d.run(stop_early=False)        # full trace, for apples-to-apples
+    sel_dev = select_optimal_freq(job_d.profile(), session.classifier)
+    # the nominal baseline is the FULL-trace selection (truth, from step 4)
+    sel_full = select_optimal_freq(truth, session.classifier)
     print(f"\ndevice portability ({device.device_id}, power "
           f"x{device.spec.power_scale:.3f}, eff-TDP "
           f"{device.spec.effective_tdp_w:.1f} W):")
@@ -106,6 +91,12 @@ def main() -> None:
           f"full-trace: {sel_dev.power_neighbor == sel_full.power_neighbor})")
     print(f"  PowerCentric cap: f={sel_dev.f_pwr:.2f} "
           f"(nominal chose f={sel_full.f_pwr:.2f})")
+
+    # 6. the whole session, as one JSON-able report
+    report = session.run()
+    print(f"\nsession report: {len(report.decisions)} decisions "
+          f"({report.early_decisions} early), {report.repacks} re-packs, "
+          f"{len(report.to_json())} bytes as JSON")
 
 
 if __name__ == "__main__":

@@ -14,10 +14,10 @@ from repro.configs.base import RunConfig, ShapeConfig
 from repro.core import MinosClassifier, select_optimal_freq
 from repro.data import ByteCorpus
 from repro.models.common import SMOKE_TOPO
-from repro.telemetry import TPUPowerModel, profile_once
+from repro.pipeline import stream_profile_once, stream_profile_workload
+from repro.telemetry import TPUPowerModel
 from repro.telemetry.kernel_stream import build_stream, micro_gemm, \
     micro_spmv_memory, micro_idle_burst
-from repro.telemetry.simulator import profile_workload
 from repro.train import Trainer
 
 
@@ -56,13 +56,14 @@ def main() -> None:
 
     # classify THIS training job with Minos (via its kernel-stream signature)
     model = TPUPowerModel()
-    refs = [profile_workload(s, model, (0.6, 0.8, 1.0), model.spec.tdp_w,
-                             seed=i, target_duration=1.0)
+    refs = [stream_profile_workload(s, model, (0.6, 0.8, 1.0),
+                                    model.spec.tdp_w, seed=i,
+                                    target_duration=1.0)
             for i, s in enumerate([micro_gemm(), micro_spmv_memory(),
                                    micro_idle_burst()])]
     clf = MinosClassifier(refs)
-    job_profile = profile_once(build_stream(cfg, shape, n_chips=1), model,
-                               model.spec.tdp_w)
+    job_profile = stream_profile_once(build_stream(cfg, shape, n_chips=1),
+                                      model, model.spec.tdp_w)
     sel = select_optimal_freq(job_profile, clf)
     print(f"\nMinos classification of this job: power-neighbor="
           f"{sel.power_neighbor}, PowerCentric cap f={sel.f_pwr:.2f}")

@@ -1,0 +1,439 @@
+"""``MinosSession``: the unified ingestion-to-decision facade.
+
+One object owns the whole Minos mechanism — the ``ReferenceLibrary`` (warm
+classifier), the device inventory, the shared power budget, and the three
+policy axes (objective / actuator / provisioning quantile, all resolvable
+by registry name) — and exposes the full job lifecycle:
+
+    session = MinosSession(lib, inventory=inv, budget_w=50_000.0)
+    job = session.submit(stream, device=inv[0], chips=256)   # -> JobHandle
+    job.feed(chunks)            # incremental telemetry; early CapDecision
+    job.decision()              # the (possibly finalized) cap decision
+    job.plan()                  # its cached power reservation
+    job.retire()                # release budget; repack WITHOUT reclassify
+    report = session.run()      # drain attached streams -> SessionReport
+
+Decisions are byte-identical to the direct ``OnlineCapController`` /
+``FleetCapController`` paths (pinned in ``tests/test_api.py``): the facade
+routes every chunk through exactly the same per-job builder + controller
+machinery, device-frame normalization included.  Jobs may arrive *and
+retire* at any point; retirement and budget changes re-pack from cached
+``JobPlan``s and never re-classify.
+
+``MinosSession.from_config(dict | json)`` constructs a session declaratively
+— library path, device counts + variability, budget, and the three policy
+names — so a deployment is one JSON document away from a running session.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from repro.api.registry import ACTUATORS, OBJECTIVES, QUANTILES
+from repro.core.algorithm1 import resolve_objective
+from repro.fleet.controller import FleetCapController, FleetJob
+from repro.fleet.inventory import DeviceInstance, DeviceInventory, \
+    VariabilityModel
+from repro.fleet.mux import FleetTelemetryMux
+from repro.pipeline.builder import PartialProfile
+from repro.pipeline.online import CapDecision
+from repro.sched.dvfs import FrequencyActuator
+from repro.sched.power_sched import JobPlan
+from repro.telemetry.kernel_stream import KernelStream
+from repro.telemetry.simulator import TelemetryChunk, TraceMeta, \
+    stream_telemetry
+
+from repro.api.results import SessionReport
+
+_GATE_KEYS = ("min_confidence", "min_fraction", "min_spike_samples")
+_CONFIG_KEYS = frozenset({"library", "devices", "variability", "seed",
+                          "objective", "actuator", "quantile", "budget_w",
+                          "budget_fraction_of_nameplate", "gates"})
+
+
+class JobHandle:
+    """Live handle on one submitted job (create via ``MinosSession.submit``).
+
+    The handle stays valid after retirement: ``decision()``/``plan()`` keep
+    returning the cached artifacts; only feeding is rejected."""
+
+    def __init__(self, session: "MinosSession", job: FleetJob,
+                 meta: TraceMeta, chunks=None):
+        self._session = session
+        self._job = job
+        self.meta = meta
+        self._chunks = chunks        # attached telemetry iterator (optional)
+        self.retired = False
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def job_id(self) -> str:
+        return self._job.job_id
+
+    @property
+    def device(self) -> DeviceInstance:
+        return self._job.device
+
+    @property
+    def decided(self) -> bool:
+        return self._job.decision is not None
+
+    @property
+    def actuator(self):
+        """The job's DVFS actuator (plugin-chosen; ``None`` = no actuation)."""
+        return self._job.actuator
+
+    @property
+    def fraction(self) -> float:
+        """Fraction of the expected trace ingested so far."""
+        return self._job.builder.fraction
+
+    def snapshot(self) -> PartialProfile:
+        """A valid partial profile over everything fed so far (pure)."""
+        return self._job.builder.snapshot()
+
+    def profile(self) -> PartialProfile:
+        """Finalize the job's builder and return the completed profile.
+        After this the job accepts no more telemetry."""
+        return self._job.builder.finalize()
+
+    # -- lifecycle -------------------------------------------------------
+    def feed(self, chunks) -> CapDecision | None:
+        """Ingest telemetry: one ``TelemetryChunk`` or an iterable of them
+        (in stream order).  Returns the job's ``CapDecision`` the moment a
+        chunk tips its confidence gate — which also re-packs the session —
+        else ``None``.  Chunks after a decision are dropped (or kept, with
+        ``profile_to_completion=True`` at submit)."""
+        self._check_live()
+        if isinstance(chunks, TelemetryChunk):
+            chunks = (chunks,)
+        decision = None
+        for chunk in chunks:
+            d = self._session._fleet.ingest_chunk(self.job_id, chunk)
+            decision = decision or d
+        return decision
+
+    def run(self, stop_early: bool = True) -> CapDecision:
+        """Pump the attached telemetry stream: with ``stop_early`` (default)
+        the pull stops at the first confident decision — the paper's
+        profiling-cost saving — else the whole stream is consumed.  Falls
+        back to the finalize decision at stream end."""
+        self._check_live()
+        if self._chunks is None:
+            raise ValueError(f"job {self.job_id!r} has no attached stream; "
+                             f"feed() it chunks instead")
+        chunks, self._chunks = self._chunks, None
+        for chunk in chunks:
+            decision = self.feed(chunk)
+            if decision is not None and stop_early:
+                return decision
+        return self.decision()
+
+    def decision(self, finalize: bool = True) -> CapDecision | None:
+        """The job's cap decision.  If none has fired yet and ``finalize``
+        is set (default), decide now from everything ingested so far — the
+        batch-equivalent decision; with ``finalize=False`` returns ``None``
+        until a decision lands.  A handle retired before any decision has
+        nothing cached and returns ``None``."""
+        if self._job.decision is not None or not finalize or self.retired:
+            return self._job.decision
+        return self._session._fleet.finalize_job(self.job_id)
+
+    def plan(self) -> JobPlan | None:
+        """The job's cached power reservation (built once, from the
+        decision's Algorithm 1 selection); ``None`` before a decision."""
+        return self._job.plan
+
+    def retire(self) -> JobPlan | None:
+        """Retire this job (see ``MinosSession.retire``)."""
+        return self._session.retire(self.job_id)
+
+    def _take_chunks(self):
+        """Detach and return the pending stream (None if already consumed)."""
+        chunks, self._chunks = self._chunks, None
+        return chunks
+
+    def _check_live(self) -> None:
+        if self.retired:
+            raise ValueError(f"job {self.job_id!r} is retired")
+
+
+class MinosSession:
+    """The session facade over the streaming pipeline + fleet layers."""
+
+    def __init__(self, references, *, inventory: DeviceInventory | None = None,
+                 budget_w: float = math.inf, objective="powercentric",
+                 actuator="sim", quantile="p99",
+                 min_confidence: float = 0.3, min_fraction: float = 0.1,
+                 min_spike_samples: int = 50):
+        """``references`` is a ``ReferenceLibrary`` (preferred: warm
+        classifier), a ``MinosClassifier``, or a profile list.  ``objective``
+        / ``actuator`` / ``quantile`` accept registry names (see
+        ``repro.api.registry``) or policy objects; gate thresholds match the
+        direct ``OnlineCapController`` defaults."""
+        self.library = references        # whatever was handed in (may be lib)
+        self.inventory = inventory
+        self._objective = self._resolve_objective(objective)
+        self._quantile = QUANTILES.get(quantile) \
+            if isinstance(quantile, str) else quantile
+        self._fleet = FleetCapController(
+            references, budget_w=budget_w, objective=self._objective,
+            provision_quantile=self._quantile,
+            min_confidence=min_confidence, min_fraction=min_fraction,
+            min_spike_samples=min_spike_samples,
+            actuator_factory=self._resolve_actuator(actuator))
+        self._handles: dict[str, JobHandle] = {}
+        self._retired: dict[str, CapDecision | None] = {}
+        self._rr = 0                     # round-robin cursor over inventory
+        self._default_device: DeviceInstance | None = None
+
+    # -- plugin resolution ----------------------------------------------
+    @staticmethod
+    def _resolve_objective(objective):
+        if isinstance(objective, str):
+            objective = OBJECTIVES.get(objective)
+        return resolve_objective(objective)
+
+    @staticmethod
+    def _resolve_actuator(actuator):
+        if actuator is None:
+            return None
+        if isinstance(actuator, str):
+            return ACTUATORS.get(actuator)
+        if isinstance(actuator, FrequencyActuator):
+            return lambda device=None: actuator   # one shared instance
+        if callable(actuator):
+            return actuator
+        raise ValueError(f"actuator must be a registry name, factory, or "
+                         f"FrequencyActuator, got {actuator!r}")
+
+    # -- declarative construction ----------------------------------------
+    @classmethod
+    def from_config(cls, config, references=None) -> "MinosSession":
+        """Build a session from a config dict, a JSON string, or a path to a
+        JSON file.  Recognized keys (all optional unless noted):
+
+          * ``library``       — reference-store directory (required unless a
+            ``references`` object is passed in);
+          * ``devices``       — chip-model -> count (or a bare int of
+            nominal v5e chips); ``variability`` — sigma dict (``{}`` =
+            published defaults), ``"none"``/omitted = nominal chips;
+            ``seed`` — inventory RNG seed;
+          * ``objective`` / ``actuator`` / ``quantile`` — registry names;
+          * ``budget_w`` — shared power budget in watts, or
+            ``budget_fraction_of_nameplate`` — fraction of the inventory's
+            total per-device nameplate TDP (requires ``devices``);
+          * ``gates`` — ``min_confidence`` / ``min_fraction`` /
+            ``min_spike_samples`` overrides.
+        """
+        if isinstance(config, (str, os.PathLike)):
+            text = str(config)
+            if not text.lstrip().startswith("{"):
+                with open(text) as f:
+                    text = f.read()
+            config = json.loads(text)
+        if not isinstance(config, dict):
+            raise ValueError(f"config must be a dict, JSON text, or a path, "
+                             f"got {type(config).__name__}")
+        unknown = set(config) - _CONFIG_KEYS
+        if unknown:
+            raise ValueError(f"unknown config keys {sorted(unknown)}; "
+                             f"recognized: {sorted(_CONFIG_KEYS)}")
+
+        if references is None:
+            if "library" not in config:
+                raise ValueError("config needs a 'library' store path "
+                                 "(or pass a references object)")
+            from repro.pipeline.library import ReferenceLibrary
+            references = ReferenceLibrary.load(config["library"])
+
+        inventory = None
+        if "devices" in config:
+            var = config.get("variability")
+            if var is None or var == "none":
+                var = VariabilityModel.none()
+            elif isinstance(var, dict):
+                var = VariabilityModel(**var)
+            elif not isinstance(var, VariabilityModel):
+                raise ValueError(f"variability must be a sigma dict or "
+                                 f"'none', got {var!r}")
+            inventory = DeviceInventory.generate(
+                config["devices"], var, seed=int(config.get("seed", 0)))
+
+        if "budget_w" in config and "budget_fraction_of_nameplate" in config:
+            raise ValueError("give budget_w or budget_fraction_of_nameplate,"
+                             " not both")
+        budget_w = math.inf
+        if "budget_w" in config:
+            budget_w = float(config["budget_w"])
+        elif "budget_fraction_of_nameplate" in config:
+            if inventory is None:
+                raise ValueError("budget_fraction_of_nameplate needs "
+                                 "'devices'")
+            budget_w = float(config["budget_fraction_of_nameplate"]) \
+                * inventory.nameplate_w
+
+        gates = dict(config.get("gates", {}))
+        bad = set(gates) - set(_GATE_KEYS)
+        if bad:
+            raise ValueError(f"unknown gate keys {sorted(bad)}; "
+                             f"recognized: {list(_GATE_KEYS)}")
+        return cls(references, inventory=inventory, budget_w=budget_w,
+                   objective=config.get("objective", "powercentric"),
+                   actuator=config.get("actuator", "sim"),
+                   quantile=config.get("quantile", "p99"), **gates)
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def classifier(self):
+        """The shared warm ``MinosClassifier`` every job classifies against."""
+        return self._fleet.clf
+
+    @property
+    def scheduler(self):
+        return self._fleet.scheduler
+
+    @property
+    def objective(self) -> str:
+        return self._objective.name
+
+    @property
+    def budget_w(self) -> float:
+        return self._fleet.budget_w
+
+    @property
+    def jobs(self) -> dict[str, JobHandle]:
+        """Live (non-retired) job handles, in submit order."""
+        return dict(self._handles)
+
+    def __len__(self) -> int:
+        return len(self._handles)
+
+    # -- lifecycle -------------------------------------------------------
+    def submit(self, source, device=None, chips: int = 1,
+               job_id: str | None = None, profile_to_completion: bool = False,
+               freq: float = 1.0, **telemetry_kw) -> JobHandle:
+        """Admit a job and return its ``JobHandle``.  ``source`` is one of
+
+          * a ``KernelStream`` — the session profiles it on ``device``'s
+            power model via ``stream_telemetry`` (``seed``,
+            ``target_duration``, ``chunk_samples``, ... pass through) and
+            attaches the chunk stream to the handle (``handle.run()``);
+          * a ``(meta, chunks)`` pair from ``stream_telemetry`` — attached
+            as-is;
+          * a bare ``TraceMeta`` — telemetry arrives via ``handle.feed``.
+
+        ``device`` is a ``DeviceInstance``, a device_id string resolved in
+        the session inventory, or ``None`` — the next inventory device
+        (round-robin), or a nominal reference chip when the session has no
+        inventory.  Default ``job_id``s (``"<workload>@<device>"``) are
+        de-duplicated with a ``#k`` suffix."""
+        device = self._resolve_device(device)
+        chunks = None
+        if isinstance(source, KernelStream):
+            meta, chunks = stream_telemetry(
+                source, freq, device.power_model(),
+                device_id=device.device_id, **telemetry_kw)
+        elif isinstance(source, TraceMeta):
+            if telemetry_kw:
+                raise ValueError(f"telemetry options {sorted(telemetry_kw)} "
+                                 f"only apply when submitting a KernelStream")
+            meta = source
+        elif isinstance(source, tuple) and len(source) == 2 \
+                and isinstance(source[0], TraceMeta):
+            if telemetry_kw:
+                raise ValueError(f"telemetry options {sorted(telemetry_kw)} "
+                                 f"only apply when submitting a KernelStream")
+            meta, chunks = source
+        else:
+            raise TypeError(f"submit() takes a KernelStream, a TraceMeta, or "
+                            f"a (meta, chunks) pair, got "
+                            f"{type(source).__name__}")
+        if job_id is None:
+            job_id = self._unique_job_id(f"{meta.name}@{device.device_id}")
+        job_id = self._fleet.admit(device, meta, chips=chips, job_id=job_id,
+                                   profile_to_completion=profile_to_completion)
+        handle = JobHandle(self, self._fleet.jobs[job_id], meta, chunks)
+        self._handles[job_id] = handle
+        return handle
+
+    def retire(self, job_id: str) -> JobPlan | None:
+        """Retire a job: its telemetry stops counting and its plan leaves
+        the packing, releasing its budget share — the survivors re-pack
+        from cached plans (never re-classifying).  Returns the retired
+        job's plan (``None`` if it never decided).  The handle's cached
+        ``decision()``/``plan()`` remain readable."""
+        handle = self._handles.pop(job_id, None)
+        if handle is None:
+            raise KeyError(f"unknown or already-retired job {job_id!r}")
+        job = self._fleet.retire(job_id)
+        handle.retired = True
+        self._retired[job_id] = job.decision
+        return job.plan
+
+    def set_budget(self, budget_w: float) -> None:
+        """Change the shared power budget mid-session; decided jobs re-pack
+        against the new ceiling from their cached plans."""
+        self._fleet.set_budget(budget_w)
+
+    def run(self, finalize: bool = True) -> SessionReport:
+        """Drain every attached-but-unconsumed telemetry stream through the
+        deterministic fleet mux (submit-order interleave), then — with
+        ``finalize`` (default) — decide any still-undecided jobs from their
+        completed profiles and re-pack once more.  Returns the report."""
+        pending = [h for h in self._handles.values()
+                   if h._chunks is not None]
+        if pending:
+            mux = FleetTelemetryMux()
+            for h in pending:
+                mux.add_job(h.job_id, h.meta, h._take_chunks())
+            for fchunk in mux:
+                self._fleet.ingest(fchunk)
+        if finalize and self._fleet.jobs:
+            self._fleet.finalize()
+        return self.report()
+
+    def report(self) -> SessionReport:
+        """The session outcome so far (pure; JSON-round-trippable)."""
+        fleet = self._fleet
+        return SessionReport(
+            objective=self.objective,
+            quantile=fleet.scheduler.quantile,
+            budget_w=fleet.budget_w,
+            decisions={job_id: job.decision
+                       for job_id, job in fleet.jobs.items()
+                       if job.decision is not None},
+            schedule=fleet.repacks[-1] if fleet.repacks else None,
+            repacks=len(fleet.repacks),
+            chunks_dropped=fleet._dropped,
+            retired=dict(self._retired))
+
+    # -- helpers ---------------------------------------------------------
+    def _resolve_device(self, device) -> DeviceInstance:
+        if isinstance(device, DeviceInstance):
+            return device
+        if isinstance(device, str):
+            if self.inventory is None:
+                raise ValueError(f"device_id {device!r} given but the "
+                                 f"session has no inventory")
+            return self.inventory.get(device)
+        if device is not None:
+            raise TypeError(f"device must be a DeviceInstance, a device_id, "
+                            f"or None, got {type(device).__name__}")
+        if self.inventory is not None and len(self.inventory):
+            dev = self.inventory[self._rr % len(self.inventory)]
+            self._rr += 1
+            return dev
+        if self._default_device is None:
+            # the nominal reference chip: scales exactly 1.0, so decisions
+            # are byte-identical to the device-less single-job path
+            self._default_device = DeviceInventory.generate(1)[0]
+        return self._default_device
+
+    def _unique_job_id(self, base: str) -> str:
+        job_id, k = base, 1
+        while job_id in self._fleet.jobs or job_id in self._retired:
+            k += 1
+            job_id = f"{base}#{k}"
+        return job_id

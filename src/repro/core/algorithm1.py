@@ -13,7 +13,8 @@ paper's 89-90% profiling-time saving.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Callable
 
 import numpy as np
 
@@ -37,6 +38,49 @@ class FreqSelection:
 
     def cap(self, objective: str) -> float:
         return self.f_pwr if objective == "powercentric" else self.f_perf
+
+
+@dataclass(frozen=True)
+class ObjectivePolicy:
+    """A pluggable capping objective: maps an Algorithm 1 ``FreqSelection``
+    to the frequency cap it actuates.  The two paper objectives are builtin;
+    custom policies register by name through ``repro.api.register_objective``
+    and flow through the same controllers as the builtins."""
+    name: str
+    cap_fn: Callable[[FreqSelection], float] = field(compare=False)
+
+    def cap(self, sel: FreqSelection) -> float:
+        return self.cap_fn(sel)
+
+
+POWERCENTRIC = ObjectivePolicy("powercentric", lambda sel: sel.f_pwr)
+PERFCENTRIC = ObjectivePolicy("perfcentric", lambda sel: sel.f_perf)
+_BUILTIN_OBJECTIVES = {p.name: p for p in (POWERCENTRIC, PERFCENTRIC)}
+
+
+def resolve_objective(objective) -> ObjectivePolicy:
+    """Resolve a builtin objective name or an ``ObjectivePolicy``-like object
+    (``.name`` + ``.cap(selection)``) to an ``ObjectivePolicy``.
+
+    Strings only resolve the two builtins here — custom objectives are
+    registered by name in ``repro.api.OBJECTIVES`` and must be resolved
+    through that registry (the session facade does this) so the core layer
+    stays independent of the plugin namespace."""
+    if isinstance(objective, ObjectivePolicy):
+        return objective
+    if isinstance(objective, str):
+        try:
+            return _BUILTIN_OBJECTIVES[objective]
+        except KeyError:
+            raise ValueError(
+                f"unknown objective {objective!r} (builtins: "
+                f"{', '.join(sorted(_BUILTIN_OBJECTIVES))}; custom objectives "
+                f"resolve by name through repro.api.OBJECTIVES)") from None
+    name = getattr(objective, "name", None)
+    if name and callable(getattr(objective, "cap", None)):
+        return ObjectivePolicy(str(name), objective.cap)
+    raise ValueError(f"objective must be a builtin name or an "
+                     f"ObjectivePolicy-like object, got {objective!r}")
 
 
 def choose_bin_size(target: WorkloadProfile, clf: MinosClassifier,

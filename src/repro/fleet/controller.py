@@ -47,9 +47,10 @@ class FleetJob:
     chips: int
     builder: ProfileBuilder
     controller: OnlineCapController
-    actuator: SimActuator
+    actuator: object               # FrequencyActuator | None (plugin-chosen)
     decision: CapDecision | None = None
     plan: JobPlan | None = None    # built once, when the decision lands
+    profile_to_completion: bool = False   # keep building after the decision
 
 
 @dataclass
@@ -76,10 +77,11 @@ class FleetCapController:
     """
 
     def __init__(self, references, budget_w: float,
-                 objective: str = "powercentric",
-                 provision_quantile: str = "p99",
+                 objective="powercentric",
+                 provision_quantile="p99",
                  min_confidence: float = 0.3, min_fraction: float = 0.1,
-                 min_spike_samples: int = 50):
+                 min_spike_samples: int = 50,
+                 actuator_factory=SimActuator.for_device):
         if isinstance(references, ReferenceLibrary):
             self.clf = references.classifier()
         elif isinstance(references, MinosClassifier):
@@ -88,6 +90,9 @@ class FleetCapController:
             self.clf = MinosClassifier(list(references))
         self.budget_w = float(budget_w)
         self.objective = objective
+        # per-device actuator plugin: called once per admitted job with the
+        # job's DeviceInstance; None disables actuation entirely
+        self.actuator_factory = actuator_factory
         self._gates = dict(min_confidence=min_confidence,
                            min_fraction=min_fraction,
                            min_spike_samples=min_spike_samples)
@@ -102,21 +107,28 @@ class FleetCapController:
 
     # -- admission -------------------------------------------------------
     def admit(self, device: DeviceInstance, meta, chips: int = 1,
-              job_id: str | None = None) -> str:
+              job_id: str | None = None,
+              profile_to_completion: bool = False) -> str:
         """Register a job on ``device``; returns its ``job_id`` (default
         ``"<workload>@<device>"``).  The job's builder normalizes by the
-        device's effective TDP — the device-portable frame."""
+        device's effective TDP — the device-portable frame.
+
+        ``profile_to_completion`` keeps ingesting telemetry into the job's
+        builder after its cap decision lands (instead of dropping it), so a
+        full-trace profile stays available — the convergence-study mode."""
         job_id = job_id or f"{meta.name}@{device.device_id}"
         if job_id in self.jobs:
             raise ValueError(f"duplicate job_id {job_id!r}")
-        actuator = SimActuator.for_device(device)
+        actuator = self.actuator_factory(device) \
+            if self.actuator_factory is not None else None
         controller = OnlineCapController(
             self.clf, objective=self.objective, actuator=actuator,
             device_id=device.device_id, **self._gates)
         self.jobs[job_id] = FleetJob(
             job_id=job_id, device=device, chips=int(chips),
             builder=ProfileBuilder(meta, tdp=device.effective_tdp_w),
-            controller=controller, actuator=actuator)
+            controller=controller, actuator=actuator,
+            profile_to_completion=profile_to_completion)
         return job_id
 
     # -- streaming -------------------------------------------------------
@@ -124,11 +136,19 @@ class FleetCapController:
         """Route one multiplexed chunk to its job.  Returns that job's
         ``CapDecision`` when this chunk tips its confidence gate (which also
         re-packs the fleet); ``None`` otherwise."""
-        job = self.jobs[fchunk.job_id]
+        return self.ingest_chunk(fchunk.job_id, fchunk.chunk)
+
+    def ingest_chunk(self, job_id: str, chunk) -> CapDecision | None:
+        """Un-muxed entry point: ingest one raw ``TelemetryChunk`` for
+        ``job_id`` (the ``MinosSession``/``JobHandle`` feed path)."""
+        job = self.jobs[job_id]
         if job.decision is not None:
-            self._dropped += 1
-            return None            # profiling already stopped for this job
-        job.builder.ingest(fchunk.chunk)
+            if not job.profile_to_completion:
+                self._dropped += 1
+                return None        # profiling already stopped for this job
+            job.builder.ingest(chunk)
+            return None            # decision already made; just keep building
+        job.builder.ingest(chunk)
         decision = job.controller.observe(job.builder)
         if decision is None:
             return None
@@ -149,12 +169,41 @@ class FleetCapController:
             schedule=self.repacks[-1], repacks=len(self.repacks),
             budget_w=self.budget_w, chunks_dropped=self._dropped)
 
+    def finalize_job(self, job_id: str) -> CapDecision:
+        """Decide one still-undecided job from whatever it has ingested so
+        far (the batch-equivalent decision) and re-pack; a no-op for jobs
+        that already decided."""
+        job = self.jobs[job_id]
+        if job.decision is None:
+            self._decide(job, job.controller.finalize(job.builder))
+            self._repack()
+        return job.decision
+
     def run(self, mux: FleetTelemetryMux) -> FleetResult:
         """Pump the multiplexed feed to completion: every chunk is routed,
         each early cap re-packs the fleet, stragglers decide at stream end."""
         for fchunk in mux:
             self.ingest(fchunk)
         return self.finalize()
+
+    # -- dynamic lifecycle -----------------------------------------------
+    def retire(self, job_id: str) -> FleetJob:
+        """Remove a job from the fleet (it finished or was cancelled): its
+        telemetry routing stops and its plan leaves the packing, releasing
+        its budget share.  If the job was planned, the survivors re-pack
+        into the freed budget — from their cached ``JobPlan``s, so a
+        retirement never re-classifies anything."""
+        job = self.jobs.pop(job_id)    # KeyError on unknown/already-retired
+        if job.plan is not None:
+            self._repack()
+        return job
+
+    def set_budget(self, budget_w: float) -> None:
+        """Change the shared power budget; re-packs the decided jobs against
+        the new ceiling (cached plans only — no re-classification)."""
+        self.budget_w = float(budget_w)
+        if any(j.plan is not None for j in self.jobs.values()):
+            self._repack()
 
     # -- packing ---------------------------------------------------------
     def _decide(self, job: FleetJob, decision: CapDecision) -> None:

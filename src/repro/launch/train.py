@@ -5,11 +5,10 @@
 
 With ``--minos-cap``, the launcher (1) loads (or builds once) the versioned
 Minos ``ReferenceLibrary`` — warm-starting the classifier from its persisted
-spike-matrix cache, (2) *streams* this job's one low-cost profiling run
-through the ``ProfileBuilder``/``OnlineCapController`` pipeline, capping
-through the DVFS actuator as soon as the partial-profile classification is
-confident (often well before the profile run would have finished), and only
-then starts training.
+spike-matrix cache, (2) opens a ``repro.api.MinosSession`` and submits this
+job's one low-cost profiling run, capping through the DVFS actuator as soon
+as the partial-profile classification is confident (often well before the
+profile run would have finished), and only then starts training.
 """
 from __future__ import annotations
 
@@ -17,13 +16,13 @@ import argparse
 
 import jax
 
+from repro.api import (MinosSession, ReferenceLibrary,
+                       build_reference_library)
 from repro.configs import ARCHS, SHAPES, RunConfig
 from repro.configs.base import ShapeConfig
 from repro.models.common import SMOKE_TOPO, Topo
-from repro.pipeline import (OnlineCapController, ReferenceLibrary,
-                            build_reference_library)
 from repro.sched import SimActuator
-from repro.telemetry import TPUPowerModel, stream_telemetry
+from repro.telemetry import TPUPowerModel
 from repro.telemetry.kernel_stream import build_stream
 from repro.train import Trainer
 
@@ -39,11 +38,11 @@ def minos_select_cap(arch: str, shape, objective: str, store_dir: str,
     lib = ReferenceLibrary.load_or_build(store_dir, build)
     # hold this arch out of its own reference set
     lib = lib.subset(lambda r: not r.name.startswith(arch))
-    controller = OnlineCapController(lib, objective=objective,
-                                     actuator=actuator)
-    stream = build_stream(ARCHS[arch], shape)
-    meta, chunks = stream_telemetry(stream, 1.0, model)
-    decision = controller.run(meta, chunks, model.spec.tdp_w)
+    session = MinosSession(lib, objective=objective,
+                           actuator=actuator if actuator is not None
+                           else "none")
+    job = session.submit(build_stream(ARCHS[arch], shape))
+    decision = job.run()               # stops profiling at the early cap
     sel = decision.selection
     how = "early, from partial profile" if decision.early else "full profile"
     print(f"[minos] target={decision.target} bin={sel.bin_size} "

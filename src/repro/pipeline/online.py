@@ -15,7 +15,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.algorithm1 import (DEFAULT_BIN_CANDIDATES, FreqSelection,
-                                   select_optimal_freq)
+                                   resolve_objective, select_optimal_freq)
 from repro.core.classify import MinosClassifier, WorkloadProfile
 from repro.pipeline.builder import ProfileBuilder
 from repro.pipeline.library import ReferenceLibrary
@@ -70,7 +70,7 @@ class OnlineCapController:
     observe every k-th chunk if sampling orders of magnitude faster.
     """
 
-    def __init__(self, references, objective: str = "powercentric",
+    def __init__(self, references, objective="powercentric",
                  actuator=None, min_confidence: float = 0.3,
                  min_fraction: float = 0.1, min_spike_samples: int = 50,
                  bin_candidates=DEFAULT_BIN_CANDIDATES,
@@ -81,9 +81,10 @@ class OnlineCapController:
             self.clf = references
         else:
             self.clf = MinosClassifier(list(references))
-        if objective not in ("powercentric", "perfcentric"):
-            raise ValueError(f"unknown objective {objective!r}")
-        self.objective = objective
+        # a builtin name ("powercentric"/"perfcentric") or any
+        # ObjectivePolicy-like plugin (see repro.api.register_objective)
+        self.objective_policy = resolve_objective(objective)
+        self.objective = self.objective_policy.name
         self.actuator = actuator
         self.min_confidence = float(min_confidence)
         self.min_fraction = float(min_fraction)
@@ -95,7 +96,7 @@ class OnlineCapController:
     def _record(self, profile, builder: ProfileBuilder, sel: FreqSelection,
                 confidence: float, early: bool) -> CapDecision:
         decision = CapDecision(
-            target=profile.name, cap=sel.cap(self.objective),
+            target=profile.name, cap=self.objective_policy.cap(sel),
             objective=self.objective, selection=sel, confidence=confidence,
             fraction=builder.fraction, n_samples=builder.n_ingested,
             early=early, device_id=self.device_id)

@@ -18,10 +18,35 @@ ones less.  Two-element entries behave exactly as before.
 """
 from __future__ import annotations
 
+import operator
 from dataclasses import dataclass, field
 
-from repro.core.algorithm1 import FreqSelection, select_optimal_freq
+from repro.core.algorithm1 import (FreqSelection, resolve_objective,
+                                   select_optimal_freq)
 from repro.core.classify import MinosClassifier, WorkloadProfile
+
+_BUILTIN_QUANTILES = ("p90", "p95", "p99")
+
+
+def resolve_quantile(quantile):
+    """Resolve a provisioning quantile to ``(name, rel_fn)`` where
+    ``rel_fn(FreqPoint) -> float`` is the relative per-chip power to reserve.
+
+    Builtin names read the matching ``FreqPoint`` attribute; anything else
+    must be a ``QuantilePolicy``-like callable carrying a ``.name`` (custom
+    quantiles register by name in ``repro.api.QUANTILES``)."""
+    if isinstance(quantile, str):
+        if quantile not in _BUILTIN_QUANTILES:
+            raise ValueError(f"unknown provisioning quantile {quantile!r} "
+                             f"(builtins: {', '.join(_BUILTIN_QUANTILES)}; "
+                             f"custom quantiles resolve by name through "
+                             f"repro.api.QUANTILES)")
+        return quantile, operator.attrgetter(quantile)
+    name = getattr(quantile, "name", None)
+    if name and callable(quantile):
+        return str(name), quantile
+    raise ValueError(f"quantile must be a builtin name or a QuantilePolicy-"
+                     f"like callable with a .name, got {quantile!r}")
 
 
 @dataclass
@@ -67,13 +92,12 @@ class PowerAwareScheduler:
     """
 
     def __init__(self, clf: MinosClassifier, tdp_w: float,
-                 objective: str = "powercentric", quantile: str = "p90"):
-        if quantile not in ("p90", "p95", "p99"):
-            raise ValueError(f"unknown provisioning quantile {quantile!r}")
+                 objective="powercentric", quantile="p90"):
         self.clf = clf
         self.tdp_w = tdp_w
-        self.objective = objective
-        self.quantile = quantile
+        self.objective_policy = resolve_objective(objective)
+        self.objective = self.objective_policy.name
+        self.quantile, self._rel = resolve_quantile(quantile)
 
     def plan_job(self, profile: WorkloadProfile, chips: int,
                  device=None) -> JobPlan:
@@ -85,12 +109,12 @@ class PowerAwareScheduler:
         """Build a ``JobPlan`` from an already-made Algorithm 1 selection —
         the fleet controller's path: a job's online ``CapDecision`` carries
         the selection, so re-packing never re-classifies."""
-        cap = sel.cap(self.objective)
+        cap = self.objective_policy.cap(sel)
         neighbor = next(r for r in self.clf.references
                         if r.name == sel.power_neighbor)
         # nearest available frequency in the neighbor's scaling data
         f = min(neighbor.scaling, key=lambda x: abs(x - cap))
-        rel = getattr(neighbor.scaling[f], self.quantile)
+        rel = self._rel(neighbor.scaling[f])
         if device is None:
             watts_base, nameplate, did = self.tdp_w, self.tdp_w, ""
         else:

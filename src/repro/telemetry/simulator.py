@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.classify import FreqPoint, WorkloadProfile
+from repro.core.classify import WorkloadProfile
 from repro.core import spikes as spk
 from repro.telemetry.kernel_stream import KernelStream
 from repro.telemetry.power_model import (
@@ -272,40 +272,32 @@ def profile_workload(stream: KernelStream, model: TPUPowerModel,
                      freqs, tdp: float, seed: int = 0,
                      sample_dt: float = 1e-3,
                      target_duration: float = 4.0) -> WorkloadProfile:
-    """Full reference profile: trace at f_max + scaling points at all freqs."""
-    scaling = {}
-    top = max(freqs)
-    top_trace = None
-    for i, f in enumerate(sorted(freqs)):
-        tr = simulate(stream, f, model, seed=seed * 1009 + i,
-                      sample_dt=sample_dt, target_duration=target_duration)
-        pq = lambda q: spk.p_quantile(tr.power_filtered, tdp, q)
-        scaling[f] = FreqPoint(
-            freq=f, p90=pq(90), p95=pq(95), p99=pq(99),
-            mean_power=spk.mean_power_rel(tr.power_filtered, tdp),
-            exec_time=tr.exec_time,
-            spike_vec=spk.spike_vector(tr.power_filtered, tdp),
-        )
-        if f == top:
-            top_trace = tr
-    return WorkloadProfile(
-        name=stream.name,
-        tdp=tdp,
-        power_trace=top_trace.power_filtered,
-        sm_util=top_trace.app_sm_util,
-        dram_util=top_trace.app_dram_util,
-        exec_time=top_trace.exec_time,
-        scaling=scaling,
-        domain=stream.domain,
-    )
+    """DEPRECATED batch sweep — routes through the streaming
+    ``ProfileBuilder`` (``repro.pipeline.stream_profile_workload``), the one
+    profiling implementation; output matches the retired batch assembly at
+    1e-9 (golden-pinned in ``tests/test_pipeline.py``)."""
+    import warnings
+    warnings.warn(
+        "repro.telemetry.profile_workload is deprecated; use "
+        "repro.pipeline.stream_profile_workload (or repro.api.MinosSession)",
+        DeprecationWarning, stacklevel=2)
+    from repro.pipeline.builder import stream_profile_workload
+    return stream_profile_workload(stream, model, freqs, tdp, seed=seed,
+                                   sample_dt=sample_dt,
+                                   target_duration=target_duration)
 
 
 def profile_once(stream: KernelStream, model: TPUPowerModel, tdp: float,
                  freq: float = 1.0, seed: int = 0) -> WorkloadProfile:
-    """The low-cost single-frequency profile Minos uses for NEW workloads."""
-    tr = simulate(stream, freq, model, seed=seed)
-    return WorkloadProfile(
-        name=stream.name, tdp=tdp, power_trace=tr.power_filtered,
-        sm_util=tr.app_sm_util, dram_util=tr.app_dram_util,
-        exec_time=tr.exec_time, scaling={}, domain=stream.domain,
-    )
+    """DEPRECATED single low-cost profile — routes through the streaming
+    ``ProfileBuilder`` (``repro.pipeline.stream_profile_once``); output
+    matches the retired batch assembly at 1e-9 (golden-pinned in
+    ``tests/test_pipeline.py``)."""
+    import warnings
+    warnings.warn(
+        "repro.telemetry.profile_once is deprecated; use "
+        "repro.pipeline.stream_profile_once (or repro.api.MinosSession"
+        ".submit)",
+        DeprecationWarning, stacklevel=2)
+    from repro.pipeline.builder import stream_profile_once
+    return stream_profile_once(stream, model, tdp, freq=freq, seed=seed)

@@ -16,7 +16,9 @@ from repro.analysis.hardware import FREQ_SWEEP
 from repro.configs import ARCHS, SHAPES
 from repro.telemetry import kernel_stream as kstream
 from repro.telemetry.power_model import TPUPowerModel
-from repro.telemetry.simulator import profile_once, profile_workload
+# NOTE: repro.pipeline.builder imports repro.telemetry.simulator, so the
+# stream_profile_* builders must be imported lazily inside the two build
+# functions below to keep `import repro.telemetry` cycle-free.
 
 HOLDOUT_PREFIX = ("vector-search", "granite-moe-3b-a800m")
 
@@ -102,10 +104,11 @@ def build_reference_set(model: TPUPowerModel | None = None,
                         freqs=FREQ_SWEEP, seed: int = 0,
                         target_duration: float = 4.0):
     """Profiles with full frequency sweeps (the shipped reference library)."""
+    from repro.pipeline.builder import stream_profile_workload
     model = model or TPUPowerModel()
     tdp = model.spec.tdp_w
-    return [profile_workload(s, model, freqs, tdp, seed=seed + i,
-                             target_duration=target_duration)
+    return [stream_profile_workload(s, model, freqs, tdp, seed=seed + i,
+                                    target_duration=target_duration)
             for i, s in enumerate(reference_streams())]
 
 
@@ -113,11 +116,14 @@ def build_holdout_profiles(model: TPUPowerModel | None = None, seed: int = 77,
                            with_truth: bool = False, freqs=FREQ_SWEEP):
     """Held-out workloads: single uncapped profile (what Minos sees) plus —
     separately — the ground-truth sweep used only for evaluating predictions."""
+    from repro.pipeline.builder import (stream_profile_once,
+                                        stream_profile_workload)
     model = model or TPUPowerModel()
     tdp = model.spec.tdp_w
     observed, truth = [], []
     for i, s in enumerate(holdout_streams()):
-        observed.append(profile_once(s, model, tdp, seed=seed + i))
+        observed.append(stream_profile_once(s, model, tdp, seed=seed + i))
         if with_truth:
-            truth.append(profile_workload(s, model, freqs, tdp, seed=seed + i))
+            truth.append(stream_profile_workload(s, model, freqs, tdp,
+                                                 seed=seed + i))
     return (observed, truth) if with_truth else observed

@@ -1,0 +1,448 @@
+"""Facade tests (PR 4 acceptance): MinosSession decisions byte-identical to
+the direct pipeline/fleet paths on the 28-workload zoo, dynamic
+submit->feed->retire->submit lifecycle re-packing without re-classification
+(classifier call-count pinned), JSON round-trips of the typed result
+objects, plugin registries, and declarative from_config construction."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import (ACTUATORS, OBJECTIVES, QUANTILES, CapDecision,
+                       DeviceInventory, FleetCapController, FleetTelemetryMux,
+                       FrequencyActuator, JobPlan, MinosSession,
+                       OnlineCapController, ReferenceLibrary, SessionReport,
+                       TPUPowerModel, VariabilityModel, from_dict, from_json,
+                       micro_gemm, micro_idle_burst, micro_spmv_compute,
+                       micro_spmv_memory, micro_stencil, reference_streams,
+                       register_actuator, register_objective,
+                       register_quantile, stream_profile_workload,
+                       stream_telemetry, to_dict, to_json)
+
+MODEL = TPUPowerModel()
+TDP = MODEL.spec.tdp_w
+FREQS = (0.6, 0.8, 1.0)
+GATES = dict(min_confidence=0.2, min_fraction=0.1, min_spike_samples=50)
+
+
+@pytest.fixture(scope="module")
+def micro_library():
+    return ReferenceLibrary(
+        (stream_profile_workload(s, MODEL, FREQS, TDP, seed=i,
+                                 target_duration=0.5)
+         for i, s in enumerate([micro_gemm(), micro_idle_burst(),
+                                micro_spmv_memory(), micro_stencil()])),
+        built_on="tpu-v5e")
+
+
+def _assert_same_decision(got: CapDecision, expect: CapDecision):
+    """Byte-identity on everything except the device tag (the facade always
+    runs on a device; the direct single-job path has none)."""
+    assert got.selection == expect.selection      # neighbor + bin + caps
+    assert got.cap == expect.cap
+    assert got.objective == expect.objective
+    assert got.confidence == expect.confidence
+    assert got.fraction == expect.fraction
+    assert got.n_samples == expect.n_samples
+    assert got.early == expect.early
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin: facade == direct paths, across the whole zoo
+# ---------------------------------------------------------------------------
+def test_session_byte_identical_to_online_controller_on_zoo(micro_library):
+    """Every workload in the 28-stream zoo gets the byte-identical decision
+    whether it goes through MinosSession.submit/run or the direct
+    OnlineCapController.run path."""
+    streams = reference_streams()
+    assert len(streams) == 28                    # the paper-scale zoo
+    session = MinosSession(micro_library, **GATES)
+    for i, stream in enumerate(streams):
+        handle = session.submit(
+            stream_telemetry(stream, 1.0, MODEL, seed=100 + i,
+                             target_duration=0.5))
+        got = handle.run()
+        single = OnlineCapController(micro_library, **GATES)
+        meta, chunks = stream_telemetry(stream, 1.0, MODEL, seed=100 + i,
+                                        target_duration=0.5)
+        expect = single.run(meta, chunks, TDP)
+        _assert_same_decision(got, expect)
+        assert got.device_id == handle.device.device_id
+        assert handle.decided and handle.plan() is not None
+
+
+def test_session_byte_identical_to_fleet_controller(micro_library):
+    """A heterogeneous variability-on fleet run through the facade equals
+    the direct FleetCapController + FleetTelemetryMux path byte-for-byte:
+    decisions, packing, repack and drop counters."""
+    inv = DeviceInventory.generate({"tpu-v5e": 2, "tpu-v5p": 1},
+                                   VariabilityModel(), seed=5)
+    jobs = [(micro_gemm, 8), (micro_spmv_memory, 4), (micro_spmv_compute, 2)]
+    budget = 0.6 * sum(chips * inv[i % len(inv)].nameplate_w
+                       for i, (_, chips) in enumerate(jobs))
+
+    def streams_for(i, dev):
+        fn, _ = jobs[i]
+        return stream_telemetry(fn(), 1.0, dev.power_model(), seed=40 + i,
+                                target_duration=0.5, chunk_samples=100,
+                                device_id=dev.device_id)
+
+    fleet = FleetCapController(micro_library, budget_w=budget, **GATES)
+    mux = FleetTelemetryMux()
+    for i, (fn, chips) in enumerate(jobs):
+        dev = inv[i % len(inv)]
+        meta, chunks = streams_for(i, dev)
+        mux.add_job(fleet.admit(dev, meta, chips), meta, chunks)
+    direct = fleet.run(mux)
+
+    session = MinosSession(micro_library, inventory=inv, budget_w=budget,
+                           **GATES)
+    for i, (fn, chips) in enumerate(jobs):
+        dev = inv[i % len(inv)]
+        session.submit(streams_for(i, dev), device=dev, chips=chips)
+    report = session.run()
+
+    assert report.decisions == direct.decisions  # full dataclass equality
+    assert list(report.decisions) == list(direct.decisions)
+    assert report.schedule.placed == direct.schedule.placed
+    assert report.schedule.deferred == direct.schedule.deferred
+    assert report.repacks == direct.repacks
+    assert report.chunks_dropped == direct.chunks_dropped
+    assert report.budget_w == direct.budget_w
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin: dynamic lifecycle never re-classifies on re-pack
+# ---------------------------------------------------------------------------
+def _count_classifier_calls(clf):
+    calls = {"n": 0}
+    for name in ("power_neighbors", "util_neighbors", "power_top2"):
+        orig = getattr(clf, name)
+
+        def wrapped(*a, _orig=orig, **k):
+            calls["n"] += 1
+            return _orig(*a, **k)
+
+        setattr(clf, name, wrapped)
+    return calls
+
+
+def test_submit_feed_retire_submit_repacks_without_reclassify(micro_library):
+    session = MinosSession(micro_library, **GATES)
+    calls = _count_classifier_calls(session.classifier)
+
+    job_a = session.submit(stream_telemetry(micro_gemm(), 1.0, MODEL, seed=1,
+                                            target_duration=0.5), chips=4)
+    job_b = session.submit(stream_telemetry(micro_spmv_memory(), 1.0, MODEL,
+                                            seed=2, target_duration=0.5),
+                           chips=4)
+    job_a.run()
+    job_b.run()
+    assert calls["n"] > 0                         # deciding DID classify
+    n_decided = calls["n"]
+    repacks_decided = session.report().repacks
+
+    # shrink the budget so only the hungrier job fits: repack, no classify
+    w_a = job_a.plan().predicted_p90_w * job_a.plan().chips
+    w_b = job_b.plan().predicted_p90_w * job_b.plan().chips
+    big, small = (job_a, job_b) if w_a >= w_b else (job_b, job_a)
+    session.set_budget(max(w_a, w_b) + 0.5 * min(w_a, w_b))
+    rep = session.report()
+    assert [p.job_id for p in rep.schedule.placed] == [big.job_id]
+    assert rep.schedule.deferred == [small.plan().name]
+    assert calls["n"] == n_decided
+
+    # retire the placed job: its budget is released and the deferred job
+    # packs into the freed headroom — again without a single classification
+    retired_plan = big.retire()
+    assert retired_plan is not None and retired_plan.job_id == big.job_id
+    rep = session.report()
+    assert [p.job_id for p in rep.schedule.placed] == [small.job_id]
+    assert rep.schedule.deferred == []
+    assert big.job_id in rep.retired
+    assert calls["n"] == n_decided
+    assert rep.repacks > repacks_decided
+
+    # the retired handle keeps its cached artifacts but refuses telemetry
+    assert big.decision(finalize=False) is not None
+    assert big.plan() is not None
+    with pytest.raises(ValueError, match="retired"):
+        big.feed([])
+    with pytest.raises(KeyError, match="unknown or already-retired"):
+        session.retire(big.job_id)
+
+    # a fresh submit after the retirement starts clean; retiring it before
+    # any decision releases nothing and still never classifies
+    meta, _ = stream_telemetry(micro_stencil(), 1.0, MODEL,
+                               target_duration=0.5)
+    job_c = session.submit(meta)
+    assert session.retire(job_c.job_id) is None
+    assert job_c.decision() is None               # nothing cached: no raise
+    assert job_c.plan() is None
+    assert calls["n"] == n_decided
+
+
+# ---------------------------------------------------------------------------
+# satellite: JSON round-trips of the typed result objects
+# ---------------------------------------------------------------------------
+def _fleet_report(micro_library) -> SessionReport:
+    inv = DeviceInventory.generate({"tpu-v5e": 1, "tpu-v6e": 1},
+                                   VariabilityModel(), seed=9)
+    session = MinosSession(micro_library, inventory=inv,
+                           budget_w=1e9, **GATES)
+    for i, fn in enumerate([micro_gemm, micro_idle_burst]):
+        session.submit(stream_telemetry(fn(), 1.0, inv[i].power_model(),
+                                        seed=i, target_duration=0.5,
+                                        device_id=inv[i].device_id),
+                       device=inv[i], chips=2 + i)
+    session.run()
+    session.retire(list(session.jobs)[0])
+    return session.report()
+
+
+def test_json_roundtrip_session_report(micro_library):
+    report = _fleet_report(micro_library)
+    assert report.decisions and report.retired    # both maps populated
+    text = report.to_json()
+    back = SessionReport.from_json(text)
+    assert back == report
+    # order stability: job insertion order survives the round trip
+    assert list(back.decisions) == list(report.decisions)
+    assert [p.job_id for p in back.schedule.placed] == \
+        [p.job_id for p in report.schedule.placed]
+    # dtype stability: ints stay ints, floats stay (exact) floats, device
+    # tags survive on fleet plans
+    plan = back.schedule.placed[0]
+    assert isinstance(plan.chips, int)
+    assert isinstance(plan.predicted_p90_w, float)
+    assert plan.device_id.startswith("tpu-")
+    d = next(iter(back.decisions.values()))
+    assert isinstance(d.n_samples, int) and isinstance(d.early, bool)
+    assert isinstance(d.selection.bin_size, float)
+    # a second encode is byte-identical (deterministic field order)
+    assert back.to_json() == text
+
+
+def test_json_roundtrip_decision_and_plan(micro_library):
+    report = _fleet_report(micro_library)
+    decision = next(iter(report.decisions.values()))
+    assert from_json(to_json(decision)) == decision
+    plan = report.schedule.placed[0]
+    back = from_json(to_json(plan))
+    assert back == plan and isinstance(back, JobPlan)
+    assert back.selection == plan.selection       # nested FreqSelection
+    # json text itself parses as plain data with stable keys
+    raw = json.loads(to_json(plan))
+    assert raw["__type__"] == "JobPlan"
+    assert raw["selection"]["__type__"] == "FreqSelection"
+
+
+def test_unbounded_budget_serializes_as_strict_json(micro_library):
+    session = MinosSession(micro_library, **GATES)     # budget_w = inf
+    session.submit(stream_telemetry(micro_gemm(), 1.0, MODEL, seed=1,
+                                    target_duration=0.5)).run()
+    report = session.run()
+    assert math.isinf(report.budget_w)
+    text = report.to_json()
+    assert "Infinity" not in text                      # RFC-parseable text
+    back = SessionReport.from_json(text)
+    assert math.isinf(back.budget_w) and back == report
+
+
+def test_codec_rejects_unknown_payloads():
+    with pytest.raises(TypeError, match="not serializable"):
+        to_dict(object())
+    with pytest.raises(TypeError, match="string dict keys"):
+        to_dict({1: "x"})
+    with pytest.raises(ValueError, match="unknown serialized type"):
+        from_dict({"__type__": "Exploit", "x": 1})
+    with pytest.raises(TypeError, match="SessionReport"):
+        SessionReport.from_json(to_json({"just": "a dict"}))
+
+
+# ---------------------------------------------------------------------------
+# plugin registries
+# ---------------------------------------------------------------------------
+def test_custom_objective_flows_through_decisions(micro_library):
+    register_objective("api-test-mincap",
+                       lambda sel: min(sel.f_pwr, sel.f_perf), replace=True)
+    session = MinosSession(micro_library, objective="api-test-mincap",
+                           **GATES)
+    d = session.submit(stream_telemetry(micro_gemm(), 1.0, MODEL, seed=3,
+                                        target_duration=0.5)).run()
+    assert d.objective == "api-test-mincap"
+    assert d.cap == min(d.selection.f_pwr, d.selection.f_perf)
+    # the scheduler plans with the same custom cap
+    plan = session.jobs[d.target + "@tpu-v5e/000"].plan()
+    assert plan.cap == d.cap
+    with pytest.raises(ValueError, match="already registered"):
+        register_objective("api-test-mincap", lambda sel: sel.f_pwr)
+    with pytest.raises(KeyError, match="unknown objective"):
+        MinosSession(micro_library, objective="nope")
+
+
+def test_custom_quantile_scales_provisioning(micro_library):
+    register_quantile("api-test-p95x", lambda fp: fp.p95 * 1.5, replace=True)
+
+    def one_plan(quantile):
+        session = MinosSession(micro_library, quantile=quantile, **GATES)
+        handle = session.submit(stream_telemetry(
+            micro_gemm(), 1.0, MODEL, seed=3, target_duration=0.5))
+        handle.run()
+        return handle.plan()
+
+    base, scaled = one_plan("p95"), one_plan("api-test-p95x")
+    assert scaled.predicted_p90_w == pytest.approx(
+        1.5 * base.predicted_p90_w, rel=1e-12)
+    with pytest.raises(ValueError, match="QuantilePolicy"):
+        MinosSession(micro_library, quantile=0.9)
+    with pytest.raises(KeyError, match="unknown quantile"):
+        MinosSession(micro_library, quantile="p42")
+
+
+class _SpyActuator(FrequencyActuator):
+    def __init__(self, device):
+        self.device = device
+        self.caps = []
+
+    def set_cap(self, freq):
+        self.caps.append(freq)
+
+    def get_cap(self):
+        return self.caps[-1] if self.caps else 1.0
+
+
+def test_custom_actuator_factory_and_registry(micro_library):
+    register_actuator("api-test-spy", _SpyActuator, replace=True)
+    session = MinosSession(micro_library, actuator="api-test-spy", **GATES)
+    handle = session.submit(stream_telemetry(micro_gemm(), 1.0, MODEL,
+                                             seed=3, target_duration=0.5))
+    d = handle.run()
+    assert isinstance(handle.actuator, _SpyActuator)
+    assert handle.actuator.caps == [d.cap]
+    assert handle.actuator.device.device_id == d.device_id
+    # "none" decides without actuating at all
+    quiet = MinosSession(micro_library, actuator="none", **GATES)
+    h2 = quiet.submit(stream_telemetry(micro_gemm(), 1.0, MODEL, seed=3,
+                                       target_duration=0.5))
+    d2 = h2.run()
+    assert h2.actuator is None
+    _assert_same_decision(d2, d)                  # actuation never feeds back
+    with pytest.raises(ValueError, match="callable"):
+        register_actuator("api-test-bad", "not-a-factory")
+    assert "api-test-spy" in ACTUATORS
+    assert {"powercentric", "perfcentric"} <= set(OBJECTIVES.names())
+    assert {"p90", "p95", "p99"} <= set(QUANTILES.names())
+
+
+# ---------------------------------------------------------------------------
+# declarative construction
+# ---------------------------------------------------------------------------
+def test_from_config_builds_full_session(micro_library, tmp_path):
+    store = str(tmp_path / "store")
+    micro_library.save(store)
+    cfg = {
+        "library": store,
+        "devices": {"tpu-v5e": 2, "tpu-v5p": 1},
+        "variability": "none",
+        "seed": 4,
+        "objective": "perfcentric",
+        "actuator": "none",
+        "quantile": "p95",
+        "budget_fraction_of_nameplate": 0.5,
+        "gates": {"min_confidence": 0.25, "min_spike_samples": 10},
+    }
+    session = MinosSession.from_config(cfg)
+    assert len(session.inventory) == 3
+    assert session.inventory.models == ["tpu-v5e", "tpu-v5p"]
+    assert session.objective == "perfcentric"
+    assert session.scheduler.quantile == "p95"
+    assert session.budget_w == pytest.approx(
+        0.5 * session.inventory.nameplate_w)
+    assert session._fleet._gates["min_confidence"] == 0.25
+    assert session._fleet._gates["min_spike_samples"] == 10
+    assert session.classifier.references[0].name == micro_library.names[0]
+    # the same config as JSON text and as a file on disk
+    for source in (json.dumps(cfg),):
+        s2 = MinosSession.from_config(source)
+        assert s2.budget_w == session.budget_w
+    path = tmp_path / "session.json"
+    path.write_text(json.dumps(cfg))
+    s3 = MinosSession.from_config(str(path))
+    assert s3.objective == "perfcentric"
+    # a config-built session still decides (end to end)
+    d = s3.submit(stream_telemetry(micro_gemm(), 1.0, MODEL, seed=3,
+                                   target_duration=0.5), chips=2).run()
+    assert d.objective == "perfcentric" and d.cap == d.selection.f_perf
+
+
+def test_from_config_validation(micro_library):
+    with pytest.raises(ValueError, match="unknown config keys"):
+        MinosSession.from_config({"budgett": 1.0}, references=micro_library)
+    with pytest.raises(ValueError, match="not both"):
+        MinosSession.from_config(
+            {"budget_w": 1.0, "budget_fraction_of_nameplate": 0.5,
+             "devices": 1}, references=micro_library)
+    with pytest.raises(ValueError, match="needs 'devices'"):
+        MinosSession.from_config({"budget_fraction_of_nameplate": 0.5},
+                                 references=micro_library)
+    with pytest.raises(ValueError, match="unknown gate keys"):
+        MinosSession.from_config({"gates": {"min_conf": 0.1}},
+                                 references=micro_library)
+    with pytest.raises(ValueError, match="'library'"):
+        MinosSession.from_config({})
+    with pytest.raises(ValueError, match="variability"):
+        MinosSession.from_config({"devices": 1, "variability": 7},
+                                 references=micro_library)
+
+
+# ---------------------------------------------------------------------------
+# handle/session edges
+# ---------------------------------------------------------------------------
+def test_submit_validation_and_unique_ids(micro_library):
+    session = MinosSession(micro_library, **GATES)
+    with pytest.raises(TypeError, match="KernelStream"):
+        session.submit(42)
+    meta, chunks = stream_telemetry(micro_gemm(), 1.0, MODEL,
+                                    target_duration=0.5)
+    with pytest.raises(ValueError, match="only apply"):
+        session.submit(meta, seed=3)
+    a = session.submit((meta, chunks))
+    meta2, chunks2 = stream_telemetry(micro_gemm(), 1.0, MODEL,
+                                      target_duration=0.5)
+    b = session.submit((meta2, chunks2))          # same workload, same device
+    assert a.job_id != b.job_id and b.job_id.endswith("#2")
+    with pytest.raises(ValueError, match="no attached stream"):
+        session.submit(meta2).run()
+    with pytest.raises(ValueError, match="no inventory"):
+        session._resolve_device("tpu-v5e/000")
+
+
+def test_inventory_round_robin_and_device_lookup(micro_library):
+    inv = DeviceInventory.generate(2, VariabilityModel.none(), seed=0)
+    session = MinosSession(micro_library, inventory=inv, **GATES)
+    handles = [session.submit(stream_telemetry(
+        micro_gemm(), 1.0, MODEL, seed=i, target_duration=0.5))
+        for i in range(3)]
+    assert [h.device.device_id for h in handles] == \
+        ["tpu-v5e/000", "tpu-v5e/001", "tpu-v5e/000"]
+    by_id = session.submit(stream_telemetry(micro_gemm(), 1.0, MODEL,
+                                            target_duration=0.5),
+                           device="tpu-v5e/001")
+    assert by_id.device is inv[1]
+    assert math.isinf(session.budget_w)
+
+
+def test_report_is_pure_and_incremental(micro_library):
+    session = MinosSession(micro_library, **GATES)
+    assert session.report() == session.report()
+    assert session.report().n_jobs == 0
+    handle = session.submit(stream_telemetry(micro_gemm(), 1.0, MODEL,
+                                             seed=1, target_duration=0.5))
+    assert session.report().decisions == {}       # nothing decided yet
+    handle.run()
+    rep = session.run()
+    assert rep.n_jobs == 1 and rep.early_decisions == int(
+        rep.decisions[handle.job_id].early)
+    assert np.isfinite(rep.decisions[handle.job_id].cap)

@@ -12,9 +12,8 @@ from repro.core.algorithm1 import select_optimal_freq
 from repro.fleet import (DeviceInstance, DeviceInventory, FleetCapController,
                          FleetTelemetryMux, VariabilityModel)
 from repro.pipeline import (OnlineCapController, ReferenceLibrary,
-                            stream_profile_workload)
-from repro.telemetry import (TPUPowerModel, profile_once, simulate,
-                             stream_telemetry)
+                            stream_profile_once, stream_profile_workload)
+from repro.telemetry import TPUPowerModel, simulate, stream_telemetry
 from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
                                            micro_spmv_compute,
                                            micro_spmv_memory, micro_stencil)
@@ -120,18 +119,18 @@ def test_device_portable_classification(micro_library):
     """A profile captured on a perturbed chip, normalized by the device's
     effective TDP, classifies to the same neighbor as the nominal chip."""
     clf = micro_library.classifier()
-    nominal = profile_once(micro_spmv_compute(), MODEL, TDP, seed=21)
+    nominal = stream_profile_once(micro_spmv_compute(), MODEL, TDP, seed=21)
     sel_nom = select_optimal_freq(nominal, clf)
     dev = DeviceInventory.generate(
         1, VariabilityModel(sigma_perf=0.0, sigma_power=0.08), seed=2)[0]
     assert dev.spec.power_scale != 1.0
-    raw = profile_once(micro_spmv_compute(), dev.power_model(),
+    raw = stream_profile_once(micro_spmv_compute(), dev.power_model(),
                        dev.effective_tdp_w, seed=21)
     sel_dev = select_optimal_freq(raw, clf)
     assert sel_dev.power_neighbor == sel_nom.power_neighbor
     assert sel_dev.f_pwr == sel_nom.f_pwr
     # normalize_profile reframes an existing nameplate-relative profile
-    nameplate_frame = profile_once(micro_spmv_compute(), dev.power_model(),
+    nameplate_frame = stream_profile_once(micro_spmv_compute(), dev.power_model(),
                                    dev.nameplate_w, seed=21)
     renormed = dev.normalize_profile(nameplate_frame)
     assert renormed.tdp == dev.effective_tdp_w

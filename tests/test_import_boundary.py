@@ -1,0 +1,72 @@
+"""Import-boundary check for the facade migration (PR 4 satellite).
+
+The entry points migrated onto ``repro.api.MinosSession`` must reach the
+repro package only through the facade surface: ``repro.api`` (and
+``repro.fleet`` for fleet-specific types), importing only names those
+packages actually export.  This keeps the examples/benchmarks honest as
+documentation — if they needed a deep import, the facade would be
+incomplete.  Add files to ``FACADE_FILES`` as they migrate.
+"""
+import ast
+import os
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# entry points that have been migrated onto the facade
+FACADE_FILES = [
+    "examples/quickstart.py",
+    "examples/fleet_power_planner.py",
+    "benchmarks/bench_fleet.py",
+    "benchmarks/bench_online_cap.py",
+]
+
+ALLOWED_MODULES = ("repro.api", "repro.fleet")
+
+
+def _repro_imports(path: str):
+    """Yield (module, names, lineno) for every repro import in ``path``."""
+    with open(os.path.join(REPO, path)) as f:
+        tree = ast.parse(f.read(), filename=path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "repro" or alias.name.startswith("repro."):
+                    yield alias.name, [], node.lineno
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "repro" or mod.startswith("repro."):
+                yield mod, [a.name for a in node.names], node.lineno
+
+
+@pytest.mark.parametrize("path", FACADE_FILES)
+def test_facade_files_import_only_api_and_fleet(path):
+    violations = []
+    for mod, names, lineno in _repro_imports(path):
+        if mod not in ALLOWED_MODULES:
+            violations.append(f"{path}:{lineno}: imports {mod!r} "
+                              f"(allowed: {', '.join(ALLOWED_MODULES)})")
+    assert not violations, "\n".join(violations)
+
+
+@pytest.mark.parametrize("path", FACADE_FILES)
+def test_facade_files_import_only_public_names(path):
+    import repro.api
+    import repro.fleet
+    public = {"repro.api": set(repro.api.__all__),
+              "repro.fleet": set(repro.fleet.__all__)}
+    violations = []
+    for mod, names, lineno in _repro_imports(path):
+        for name in names:
+            if mod in public and name not in public[mod]:
+                violations.append(f"{path}:{lineno}: {name!r} is not a "
+                                  f"public (__all__) name of {mod}")
+    assert not violations, "\n".join(violations)
+
+
+def test_api_all_names_exist():
+    """Every advertised facade name must actually resolve."""
+    import repro.api
+    missing = [n for n in repro.api.__all__ if not hasattr(repro.api, n)]
+    assert not missing, f"repro.api.__all__ names missing: {missing}"

@@ -7,7 +7,8 @@ from repro.core import MinosClassifier, select_optimal_freq
 from repro.core.algorithm1 import cap_power_centric
 from repro.core.baselines import mean_power_neighbor
 from repro.core.reference_store import load_profiles, save_profiles
-from repro.telemetry import TPUPowerModel, profile_once, profile_workload
+from repro.pipeline import stream_profile_once, stream_profile_workload
+from repro.telemetry import TPUPowerModel
 from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
                                            micro_spmv_compute,
                                            micro_spmv_memory, micro_stencil,
@@ -22,7 +23,7 @@ def small_refs():
     tdp = model.spec.tdp_w
     streams = [micro_gemm(), micro_spmv_memory(), micro_spmv_compute(),
                micro_idle_burst(), micro_stencil()]
-    return [profile_workload(s, model, FREQS, tdp, seed=i,
+    return [stream_profile_workload(s, model, FREQS, tdp, seed=i,
                              target_duration=1.0)
             for i, s in enumerate(streams)]
 
@@ -30,7 +31,7 @@ def small_refs():
 def test_power_neighbor_is_sane(small_refs):
     model = TPUPowerModel()
     clf = MinosClassifier(small_refs)
-    target = profile_once(micro_vector_search(), model, model.spec.tdp_w, seed=42)
+    target = stream_profile_once(micro_vector_search(), model, model.spec.tdp_w, seed=42)
     nn, d = clf.power_neighbor(target)
     # FAISS-like batched distance GEMMs look like compute-bound workloads
     assert nn.name in ("sgemm-25k", "mpsdns-like", "pagerank-gunrock")
@@ -51,11 +52,11 @@ def test_full_selection_and_prediction_accuracy(small_refs):
     model = TPUPowerModel()
     tdp = model.spec.tdp_w
     clf = MinosClassifier(small_refs)
-    observed = profile_once(micro_vector_search(), model, tdp, seed=7)
+    observed = stream_profile_once(micro_vector_search(), model, tdp, seed=7)
     sel = select_optimal_freq(observed, clf)
     assert sel.f_pwr in FREQS and sel.f_perf in FREQS
     # ground truth (never shown to Minos): profile the target at the cap
-    truth = profile_workload(micro_vector_search(), model, FREQS, tdp, seed=7)
+    truth = stream_profile_workload(micro_vector_search(), model, FREQS, tdp, seed=7)
     pred_p90 = next(r for r in small_refs if r.name == sel.power_neighbor
                     ).scaling[sel.f_pwr].p90
     true_p90 = truth.scaling[sel.f_pwr].p90
@@ -68,7 +69,7 @@ def test_minos_beats_or_matches_mean_power_on_bursty(small_refs):
     model = TPUPowerModel()
     tdp = model.spec.tdp_w
     clf = MinosClassifier(small_refs)
-    target = profile_once(micro_idle_burst(bursts=5, gap_s=0.1), model, tdp, seed=3)
+    target = stream_profile_once(micro_idle_burst(bursts=5, gap_s=0.1), model, tdp, seed=3)
     target.name = "idle-burst-variant"
     nn_minos, _ = clf.power_neighbor(target)
     nn_mean, _ = mean_power_neighbor(target, small_refs)

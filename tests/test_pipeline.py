@@ -11,13 +11,13 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import spikes
 from repro.core.algorithm1 import select_optimal_freq
-from repro.core.classify import MinosClassifier
+from repro.core.classify import FreqPoint, MinosClassifier, WorkloadProfile
 from repro.pipeline import (OnlineCapController, ProfileBuilder,
                             ReferenceLibrary, classify_with_margin,
                             stream_profile_once, stream_profile_workload)
 from repro.sched import SimActuator
 from repro.telemetry import (TPUPowerModel, profile_once, profile_workload,
-                             stream_telemetry)
+                             simulate, stream_telemetry)
 from repro.telemetry.kernel_stream import (micro_gemm, micro_idle_burst,
                                            micro_spmv_memory, micro_stencil)
 from repro.telemetry.simulator import TelemetryChunk, TraceMeta
@@ -28,12 +28,47 @@ FREQS = (0.6, 0.8, 1.0)
 
 
 # ---------------------------------------------------------------------------
+# the retired batch assembly, frozen here as the golden reference for both
+# the streaming builder and the deprecation shims that replaced it
+# ---------------------------------------------------------------------------
+def _batch_profile_once(stream, model, tdp, freq=1.0, seed=0,
+                        target_duration=4.0):
+    tr = simulate(stream, freq, model, seed=seed,
+                  target_duration=target_duration)
+    return WorkloadProfile(
+        name=stream.name, tdp=tdp, power_trace=tr.power_filtered,
+        sm_util=tr.app_sm_util, dram_util=tr.app_dram_util,
+        exec_time=tr.exec_time, scaling={}, domain=stream.domain)
+
+
+def _batch_profile_workload(stream, model, freqs, tdp, seed=0,
+                            target_duration=4.0):
+    scaling, top, top_tr = {}, max(freqs), None
+    for i, f in enumerate(sorted(freqs)):
+        tr = simulate(stream, f, model, seed=seed * 1009 + i,
+                      target_duration=target_duration)
+        scaling[f] = FreqPoint(
+            freq=f, p90=spikes.p_quantile(tr.power_filtered, tdp, 90),
+            p95=spikes.p_quantile(tr.power_filtered, tdp, 95),
+            p99=spikes.p_quantile(tr.power_filtered, tdp, 99),
+            mean_power=spikes.mean_power_rel(tr.power_filtered, tdp),
+            exec_time=tr.exec_time,
+            spike_vec=spikes.spike_vector(tr.power_filtered, tdp))
+        if f == top:
+            top_tr = tr
+    return WorkloadProfile(
+        name=stream.name, tdp=tdp, power_trace=top_tr.power_filtered,
+        sm_util=top_tr.app_sm_util, dram_util=top_tr.app_dram_util,
+        exec_time=top_tr.exec_time, scaling=scaling, domain=stream.domain)
+
+
+# ---------------------------------------------------------------------------
 # ProfileBuilder: golden equivalence against the batch path
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("stream_fn", [micro_gemm, micro_idle_burst,
                                        micro_spmv_memory])
 def test_stream_profile_once_matches_batch(stream_fn):
-    batch = profile_once(stream_fn(), MODEL, TDP, seed=5)
+    batch = _batch_profile_once(stream_fn(), MODEL, TDP, seed=5)
     streamed = stream_profile_once(stream_fn(), MODEL, TDP, seed=5,
                                    chunk_samples=173)
     np.testing.assert_allclose(streamed.power_trace, batch.power_trace,
@@ -46,8 +81,8 @@ def test_stream_profile_once_matches_batch(stream_fn):
 
 
 def test_stream_profile_workload_matches_batch():
-    batch = profile_workload(micro_gemm(), MODEL, FREQS, TDP, seed=3,
-                             target_duration=1.0)
+    batch = _batch_profile_workload(micro_gemm(), MODEL, FREQS, TDP, seed=3,
+                                    target_duration=1.0)
     streamed = stream_profile_workload(micro_gemm(), MODEL, FREQS, TDP,
                                        seed=3, target_duration=1.0)
     np.testing.assert_allclose(streamed.power_trace, batch.power_trace,
@@ -59,6 +94,42 @@ def test_stream_profile_workload_matches_batch():
             assert getattr(a, attr) == pytest.approx(getattr(b, attr),
                                                      abs=1e-9), (f, attr)
         np.testing.assert_allclose(a.spike_vec, b.spike_vec, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: one implementation, pinned to the retired batch output
+# ---------------------------------------------------------------------------
+def test_profile_once_shim_warns_and_matches_old_output():
+    with pytest.warns(DeprecationWarning, match="stream_profile_once"):
+        shimmed = profile_once(micro_gemm(), MODEL, TDP, seed=5)
+    old = _batch_profile_once(micro_gemm(), MODEL, TDP, seed=5)
+    np.testing.assert_allclose(shimmed.power_trace, old.power_trace,
+                               rtol=1e-9, atol=1e-9)
+    assert (shimmed.name, shimmed.sm_util, shimmed.dram_util,
+            shimmed.exec_time, shimmed.domain) == \
+        (old.name, old.sm_util, old.dram_util, old.exec_time, old.domain)
+    # ...and is byte-identical to the one streaming implementation
+    streamed = stream_profile_once(micro_gemm(), MODEL, TDP, seed=5)
+    np.testing.assert_array_equal(shimmed.power_trace, streamed.power_trace)
+
+
+def test_profile_workload_shim_warns_and_matches_old_output():
+    with pytest.warns(DeprecationWarning, match="stream_profile_workload"):
+        shimmed = profile_workload(micro_gemm(), MODEL, FREQS, TDP, seed=3,
+                                   target_duration=1.0)
+    old = _batch_profile_workload(micro_gemm(), MODEL, FREQS, TDP, seed=3,
+                                  target_duration=1.0)
+    np.testing.assert_allclose(shimmed.power_trace, old.power_trace,
+                               rtol=1e-9, atol=1e-9)
+    for f in FREQS:
+        a, b = shimmed.scaling[f], old.scaling[f]
+        for attr in ("freq", "p90", "p95", "p99", "mean_power", "exec_time"):
+            assert getattr(a, attr) == pytest.approx(getattr(b, attr),
+                                                     abs=1e-9), (f, attr)
+        np.testing.assert_allclose(a.spike_vec, b.spike_vec, atol=1e-9)
+    streamed = stream_profile_workload(micro_gemm(), MODEL, FREQS, TDP,
+                                       seed=3, target_duration=1.0)
+    np.testing.assert_array_equal(shimmed.power_trace, streamed.power_trace)
 
 
 def test_builder_incremental_histogram_matches_trace():
@@ -219,7 +290,7 @@ def test_library_save_load_warm_start_byte_identical(small_library, tmp_path):
     # matrices and every neighbor decision must be byte-identical
     warm = loaded.classifier()
     cold = MinosClassifier(loaded.profiles)
-    targets = [profile_once(micro_stencil(), MODEL, TDP, seed=31)]
+    targets = [stream_profile_once(micro_stencil(), MODEL, TDP, seed=31)]
     for c in small_library.bin_sizes:
         np.testing.assert_array_equal(warm.spike_matrix(c),
                                       cold.spike_matrix(c))
@@ -263,7 +334,7 @@ def test_library_dedup_removes_clones(small_library):
 # ---------------------------------------------------------------------------
 def test_classify_with_margin_bounds(small_library):
     clf = small_library.classifier()
-    target = profile_once(micro_stencil(), MODEL, TDP, seed=7)
+    target = stream_profile_once(micro_stencil(), MODEL, TDP, seed=7)
     sel, conf = classify_with_margin(target, clf)
     assert 0.0 <= conf <= 1.0
     assert sel.power_neighbor == select_optimal_freq(target, clf).power_neighbor
