@@ -11,17 +11,19 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_baseline_cmp, bench_binsize, bench_case_study,
-                            bench_cdf, bench_classification, bench_fleet,
-                            bench_freq_scaling, bench_holdout, bench_kernels,
-                            bench_online_cap, bench_profiling_throughput,
-                            bench_roofline, bench_savings)
+                            bench_cdf, bench_chaos, bench_classification,
+                            bench_fleet, bench_freq_scaling, bench_holdout,
+                            bench_kernels, bench_online_cap,
+                            bench_profiling_throughput, bench_roofline,
+                            bench_savings)
 
     print("name,us_per_call,derived")
     failures = []
     for mod in (bench_classification, bench_cdf, bench_freq_scaling,
                 bench_case_study, bench_holdout, bench_baseline_cmp,
                 bench_binsize, bench_savings, bench_kernels, bench_roofline,
-                bench_profiling_throughput, bench_online_cap, bench_fleet):
+                bench_profiling_throughput, bench_online_cap, bench_fleet,
+                bench_chaos):
         try:
             mod.run()
         except Exception:

@@ -40,11 +40,14 @@ from repro.api.session import JobHandle, MinosSession
 from repro.core.algorithm1 import (FreqSelection, ObjectivePolicy,
                                    profiling_savings, resolve_objective,
                                    select_optimal_freq)
-from repro.core.classify import FreqPoint, MinosClassifier, WorkloadProfile
-from repro.fleet.controller import FleetCapController, FleetResult
+from repro.core.classify import (FreqPoint, MinosClassifier, WorkloadProfile,
+                                 count_classifier_calls)
+from repro.fleet.controller import FleetCapController, FleetEvent, FleetResult
 from repro.fleet.inventory import (DeviceInstance, DeviceInventory,
                                    VariabilityModel)
 from repro.fleet.mux import FleetChunk, FleetTelemetryMux
+from repro.ft.fleetwatch import FleetStragglerAdapter
+from repro.ft.heartbeat import StragglerMonitor
 from repro.pipeline.builder import (PartialProfile, ProfileBuilder,
                                     stream_profile_once,
                                     stream_profile_workload)
@@ -80,10 +83,12 @@ __all__ = [
     "stream_profile_once", "stream_profile_workload",
     # classification core
     "MinosClassifier", "WorkloadProfile", "FreqPoint",
-    "select_optimal_freq", "profiling_savings",
+    "select_optimal_freq", "profiling_savings", "count_classifier_calls",
     # fleet
     "DeviceInstance", "DeviceInventory", "VariabilityModel",
     "FleetCapController", "FleetResult", "FleetChunk", "FleetTelemetryMux",
+    # fault tolerance
+    "FleetEvent", "FleetStragglerAdapter", "StragglerMonitor",
     # actuation / scheduling
     "FrequencyActuator", "SimActuator", "PowerAwareScheduler",
     # telemetry + workload zoo

@@ -9,7 +9,8 @@ persist or ship over the wire:
     the packed placement (from ``repro.sched``), device_id-tagged on a
     fleet;
   * ``SessionReport`` — the whole session outcome: every live decision,
-    the final packing, repack/drop counters, and the retired jobs.
+    the final packing, repack/drop counters, the retired jobs, and the
+    fleet's fault-tolerance trail (``FleetEvent``s + device health).
 
 ``to_dict``/``from_dict`` (and the ``to_json``/``from_json`` wrappers)
 round-trip all of them losslessly: dataclasses are tagged with their type
@@ -28,6 +29,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.algorithm1 import FreqSelection
+from repro.fleet.controller import FleetEvent
 from repro.pipeline.online import CapDecision
 from repro.sched.power_sched import JobPlan, ScheduleResult
 
@@ -45,10 +47,21 @@ class SessionReport:
     repacks: int = 0
     chunks_dropped: int = 0      # telemetry skipped after early decisions
     retired: dict[str, CapDecision | None] = field(default_factory=dict)
+    events: list = field(default_factory=list)     # FleetEvents, in order
+    device_health: dict[str, str] = field(default_factory=dict)
 
     @property
     def early_decisions(self) -> int:
         return sum(d.early for d in self.decisions.values())
+
+    @property
+    def migrations(self) -> int:
+        """Jobs moved (or elastically shrunk) by failure/degrade handling."""
+        return sum(e.kind in ("migrate", "shrink") for e in self.events)
+
+    @property
+    def failures(self) -> int:
+        return sum(e.kind == "fail" for e in self.events)
 
     @property
     def n_jobs(self) -> int:
@@ -73,7 +86,7 @@ class SessionReport:
 _CODEC_TYPES: dict[str, type] = {
     cls.__name__: cls
     for cls in (FreqSelection, CapDecision, JobPlan, ScheduleResult,
-                SessionReport)
+                SessionReport, FleetEvent)
 }
 
 

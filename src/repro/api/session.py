@@ -32,10 +32,12 @@ import os
 
 from repro.api.registry import ACTUATORS, OBJECTIVES, QUANTILES
 from repro.core.algorithm1 import resolve_objective
-from repro.fleet.controller import FleetCapController, FleetJob
+from repro.fleet.controller import FleetCapController, FleetEvent, FleetJob
 from repro.fleet.inventory import DeviceInstance, DeviceInventory, \
     VariabilityModel
 from repro.fleet.mux import FleetTelemetryMux
+from repro.ft.fleetwatch import FleetStragglerAdapter
+from repro.ft.heartbeat import StragglerMonitor
 from repro.pipeline.builder import PartialProfile
 from repro.pipeline.online import CapDecision
 from repro.sched.dvfs import FrequencyActuator
@@ -47,9 +49,11 @@ from repro.telemetry.simulator import TelemetryChunk, TraceMeta, \
 from repro.api.results import SessionReport
 
 _GATE_KEYS = ("min_confidence", "min_fraction", "min_spike_samples")
+_STRAGGLER_KEYS = ("window", "k", "min_samples")
 _CONFIG_KEYS = frozenset({"library", "devices", "variability", "seed",
                           "objective", "actuator", "quantile", "budget_w",
-                          "budget_fraction_of_nameplate", "gates"})
+                          "budget_fraction_of_nameplate", "gates",
+                          "stragglers"})
 
 
 class JobHandle:
@@ -145,6 +149,31 @@ class JobHandle:
         decision's Algorithm 1 selection); ``None`` before a decision."""
         return self._job.plan
 
+    def reprofile(self, source, freq: float = 1.0, **telemetry_kw) -> None:
+        """Restart this job's profiling run — the recovery step after a
+        mid-profile device failure migrated it (its partial trace died with
+        the old device).  ``source`` is a ``KernelStream`` (profiled on the
+        job's *current* device), a ``(meta, chunks)`` pair, or a bare
+        ``TraceMeta``; fresh chunks attach to the handle for ``run()`` /
+        the session drain.  Only undecided jobs can re-profile."""
+        self._check_live()
+        if isinstance(source, KernelStream):
+            meta, chunks = stream_telemetry(
+                source, freq, self.device.power_model(),
+                device_id=self.device.device_id, **telemetry_kw)
+        elif isinstance(source, TraceMeta):
+            meta, chunks = source, None
+        elif isinstance(source, tuple) and len(source) == 2 \
+                and isinstance(source[0], TraceMeta):
+            meta, chunks = source
+        else:
+            raise TypeError(f"reprofile() takes a KernelStream, a TraceMeta,"
+                            f" or a (meta, chunks) pair, got "
+                            f"{type(source).__name__}")
+        self._session._fleet.restart_profile(self.job_id, meta)
+        self.meta = meta
+        self._chunks = chunks
+
     def retire(self) -> JobPlan | None:
         """Retire this job (see ``MinosSession.retire``)."""
         return self._session.retire(self.job_id)
@@ -166,12 +195,18 @@ class MinosSession:
                  budget_w: float = math.inf, objective="powercentric",
                  actuator="sim", quantile="p99",
                  min_confidence: float = 0.3, min_fraction: float = 0.1,
-                 min_spike_samples: int = 50):
+                 min_spike_samples: int = 50, stragglers=None):
         """``references`` is a ``ReferenceLibrary`` (preferred: warm
         classifier), a ``MinosClassifier``, or a profile list.  ``objective``
         / ``actuator`` / ``quantile`` accept registry names (see
         ``repro.api.registry``) or policy objects; gate thresholds match the
-        direct ``OnlineCapController`` defaults."""
+        direct ``OnlineCapController`` defaults.
+
+        ``stragglers`` opts into proactive degrade-and-drain: pass a
+        ``ft.StragglerMonitor`` (or a prebuilt ``FleetStragglerAdapter``, or
+        ``True`` for monitor defaults) and the fleet flags devices whose
+        telemetry cadence falls behind, migrating their decided jobs to
+        healthy silicon without a single re-classification."""
         self.library = references        # whatever was handed in (may be lib)
         self.inventory = inventory
         self._objective = self._resolve_objective(objective)
@@ -182,7 +217,9 @@ class MinosSession:
             provision_quantile=self._quantile,
             min_confidence=min_confidence, min_fraction=min_fraction,
             min_spike_samples=min_spike_samples,
-            actuator_factory=self._resolve_actuator(actuator))
+            actuator_factory=self._resolve_actuator(actuator),
+            inventory=inventory,
+            straggler_adapter=self._resolve_stragglers(stragglers))
         self._handles: dict[str, JobHandle] = {}
         self._retired: dict[str, CapDecision | None] = {}
         self._rr = 0                     # round-robin cursor over inventory
@@ -208,6 +245,19 @@ class MinosSession:
         raise ValueError(f"actuator must be a registry name, factory, or "
                          f"FrequencyActuator, got {actuator!r}")
 
+    @staticmethod
+    def _resolve_stragglers(stragglers):
+        if stragglers is None or stragglers is False:
+            return None
+        if stragglers is True:
+            return FleetStragglerAdapter()
+        if isinstance(stragglers, FleetStragglerAdapter):
+            return stragglers
+        if isinstance(stragglers, StragglerMonitor):
+            return FleetStragglerAdapter(stragglers)
+        raise ValueError(f"stragglers must be True, a StragglerMonitor, or "
+                         f"a FleetStragglerAdapter, got {stragglers!r}")
+
     # -- declarative construction ----------------------------------------
     @classmethod
     def from_config(cls, config, references=None) -> "MinosSession":
@@ -225,7 +275,10 @@ class MinosSession:
             ``budget_fraction_of_nameplate`` — fraction of the inventory's
             total per-device nameplate TDP (requires ``devices``);
           * ``gates`` — ``min_confidence`` / ``min_fraction`` /
-            ``min_spike_samples`` overrides.
+            ``min_spike_samples`` overrides;
+          * ``stragglers`` — ``true`` (monitor defaults) or a
+            ``window``/``k``/``min_samples`` dict: proactive
+            degrade-and-drain of devices whose telemetry cadence lags.
         """
         if isinstance(config, (str, os.PathLike)):
             text = str(config)
@@ -279,10 +332,22 @@ class MinosSession:
         if bad:
             raise ValueError(f"unknown gate keys {sorted(bad)}; "
                              f"recognized: {list(_GATE_KEYS)}")
+
+        stragglers = config.get("stragglers")
+        if isinstance(stragglers, dict):
+            bad = set(stragglers) - set(_STRAGGLER_KEYS)
+            if bad:
+                raise ValueError(f"unknown straggler keys {sorted(bad)}; "
+                                 f"recognized: {list(_STRAGGLER_KEYS)}")
+            stragglers = StragglerMonitor(**stragglers)
+        elif stragglers not in (None, True, False):
+            raise ValueError(f"stragglers must be true or a monitor-params "
+                             f"dict, got {stragglers!r}")
         return cls(references, inventory=inventory, budget_w=budget_w,
                    objective=config.get("objective", "powercentric"),
                    actuator=config.get("actuator", "sim"),
-                   quantile=config.get("quantile", "p99"), **gates)
+                   quantile=config.get("quantile", "p99"),
+                   stragglers=stragglers, **gates)
 
     # -- introspection ---------------------------------------------------
     @property
@@ -313,7 +378,8 @@ class MinosSession:
     # -- lifecycle -------------------------------------------------------
     def submit(self, source, device=None, chips: int = 1,
                job_id: str | None = None, profile_to_completion: bool = False,
-               freq: float = 1.0, **telemetry_kw) -> JobHandle:
+               freq: float = 1.0, devices=None, mesh=None,
+               global_batch: int | None = None, **telemetry_kw) -> JobHandle:
         """Admit a job and return its ``JobHandle``.  ``source`` is one of
 
           * a ``KernelStream`` — the session profiles it on ``device``'s
@@ -325,11 +391,19 @@ class MinosSession:
           * a bare ``TraceMeta`` — telemetry arrives via ``handle.feed``.
 
         ``device`` is a ``DeviceInstance``, a device_id string resolved in
-        the session inventory, or ``None`` — the next inventory device
-        (round-robin), or a nominal reference chip when the session has no
-        inventory.  Default ``job_id``s (``"<workload>@<device>"``) are
-        de-duplicated with a ``#k`` suffix."""
+        the session inventory, or ``None`` — the next *healthy* inventory
+        device (round-robin), or a nominal reference chip when the session
+        has no inventory.  Default ``job_id``s (``"<workload>@<device>"``)
+        are de-duplicated with a ``#k`` suffix.
+
+        Multi-chip jobs may span several devices: pass the full span as
+        ``devices`` (instances or device_ids; must include ``device``) with
+        ``chips`` divided evenly across it, plus an optional ``mesh`` /
+        ``global_batch`` — a partial device loss then shrinks the job
+        through the elastic re-mesh instead of migrating it wholesale."""
         device = self._resolve_device(device)
+        if devices is not None:
+            devices = tuple(self._resolve_device(d) for d in devices)
         chunks = None
         if isinstance(source, KernelStream):
             meta, chunks = stream_telemetry(
@@ -353,7 +427,9 @@ class MinosSession:
         if job_id is None:
             job_id = self._unique_job_id(f"{meta.name}@{device.device_id}")
         job_id = self._fleet.admit(device, meta, chips=chips, job_id=job_id,
-                                   profile_to_completion=profile_to_completion)
+                                   profile_to_completion=profile_to_completion,
+                                   devices=devices, mesh=mesh,
+                                   global_batch=global_batch)
         handle = JobHandle(self, self._fleet.jobs[job_id], meta, chunks)
         self._handles[job_id] = handle
         return handle
@@ -376,6 +452,41 @@ class MinosSession:
         """Change the shared power budget mid-session; decided jobs re-pack
         against the new ceiling from their cached plans."""
         self._fleet.set_budget(budget_w)
+
+    # -- fault tolerance -------------------------------------------------
+    def fail_device(self, device_id: str) -> list[FleetEvent]:
+        """A device died: every affected job migrates to surviving healthy
+        devices from its cached decision (**zero classifier calls** — the
+        same invariant as retire/set_budget), multi-chip jobs shrink via
+        the elastic re-mesh, and the fleet re-packs once.  Needs a session
+        inventory.  Returns the failure's events (also in ``report()``)."""
+        return self._fleet.fail_device(device_id)
+
+    def degrade_device(self, device_id: str) -> list[FleetEvent]:
+        """Mark a device as straggling and proactively drain its decided
+        jobs onto healthy silicon (no re-classification).  Jobs still
+        profiling on it finish and migrate the moment they decide."""
+        return self._fleet.degrade_device(device_id)
+
+    def restore_device(self, device_id: str) -> list[FleetEvent]:
+        """Return a failed/degraded device to the healthy placement pool
+        (existing placements stay put; the device takes new work again)."""
+        return self._fleet.restore_device(device_id)
+
+    @property
+    def device_health(self) -> dict[str, str]:
+        """device_id -> ``"healthy"``/``"degraded"``/``"failed"`` for the
+        session inventory (empty without one)."""
+        return self._fleet.device_health()
+
+    @property
+    def stragglers(self) -> FleetStragglerAdapter | None:
+        """The session's straggler adapter (``None`` unless enabled): read
+        ``.degraded()`` for cadence outliers and ``.dead()`` for devices
+        that went silent — the latter is advisory; escalate a genuinely
+        lost device with ``fail_device`` yourself (silence can also mean
+        its jobs finished early)."""
+        return self._fleet.straggler_adapter
 
     def run(self, finalize: bool = True) -> SessionReport:
         """Drain every attached-but-unconsumed telemetry stream through the
@@ -407,7 +518,9 @@ class MinosSession:
             schedule=fleet.repacks[-1] if fleet.repacks else None,
             repacks=len(fleet.repacks),
             chunks_dropped=fleet._dropped,
-            retired=dict(self._retired))
+            retired=dict(self._retired),
+            events=list(fleet.events),
+            device_health=fleet.device_health())
 
     # -- helpers ---------------------------------------------------------
     def _resolve_device(self, device) -> DeviceInstance:
@@ -422,9 +535,16 @@ class MinosSession:
             raise TypeError(f"device must be a DeviceInstance, a device_id, "
                             f"or None, got {type(device).__name__}")
         if self.inventory is not None and len(self.inventory):
-            dev = self.inventory[self._rr % len(self.inventory)]
-            self._rr += 1
-            return dev
+            # round-robin over HEALTHY devices only: failed/degraded chips
+            # take no new placements (an all-healthy inventory walks the
+            # exact pre-FT order)
+            for _ in range(len(self.inventory)):
+                dev = self.inventory[self._rr % len(self.inventory)]
+                self._rr += 1
+                if self.inventory.is_healthy(dev.device_id):
+                    return dev
+            raise ValueError("no healthy device left in the inventory; "
+                             "restore_device one or pass a device explicitly")
         if self._default_device is None:
             # the nominal reference chip: scales exactly 1.0, so decisions
             # are byte-identical to the device-less single-job path

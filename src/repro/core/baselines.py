@@ -12,6 +12,17 @@ import numpy as np
 from repro.core.classify import WorkloadProfile
 
 
+def _check_eligible(best: WorkloadProfile | None, target: WorkloadProfile,
+                    exclude: str | None) -> None:
+    # same contract as MinosClassifier._check_eligible: an all-excluded
+    # reference set is a ValueError, never a (None, inf) return that blows
+    # up callers later with an AttributeError
+    if best is None:
+        raise ValueError(
+            f"no eligible reference for target {target.name!r}: every "
+            f"reference is excluded (self-match or exclude={exclude!r})")
+
+
 def mean_power_neighbor(target: WorkloadProfile,
                         references: list[WorkloadProfile],
                         exclude: str | None = None
@@ -24,6 +35,7 @@ def mean_power_neighbor(target: WorkloadProfile,
         d = abs(mt - r.mean_power)
         if d < best_d:
             best, best_d = r, d
+    _check_eligible(best, target, exclude)
     return best, float(best_d)
 
 
@@ -40,4 +52,5 @@ def util_only_neighbor(target: WorkloadProfile,
         d = float(np.linalg.norm(v - r.util_point))
         if d < best_d:
             best, best_d = r, d
+    _check_eligible(best, target, exclude)
     return best, best_d

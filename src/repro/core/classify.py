@@ -277,3 +277,23 @@ def _cosine_distances(A: np.ndarray, B: np.ndarray) -> np.ndarray:
     D[na == 0, :] = 1.0
     D[:, nb == 0] = 1.0
     return D
+
+
+def count_classifier_calls(clf: "MinosClassifier") -> dict:
+    """Instrument ``clf`` in place to count its neighbor/margin queries
+    (``power_neighbors`` / ``util_neighbors`` / ``power_top2``); returns a
+    live ``{"n": count}`` dict.  This is the shared spy behind the
+    zero-reclassification pins: repacks, retirements, budget changes, and
+    every chaos-handling path (fail/degrade/restore/migrate) must leave the
+    count unchanged (``tests/test_api.py``, ``tests/test_chaos.py``,
+    ``benchmarks/bench_chaos.py``)."""
+    calls = {"n": 0}
+    for name in ("power_neighbors", "util_neighbors", "power_top2"):
+        orig = getattr(clf, name)
+
+        def wrapped(*a, _orig=orig, **k):
+            calls["n"] += 1
+            return _orig(*a, **k)
+
+        setattr(clf, name, wrapped)
+    return calls

@@ -25,15 +25,21 @@ Three layers:
     jobs' ``TelemetryChunk`` streams into one system-wide feed.
   * ``controller`` — ``FleetCapController``: one ``OnlineCapController``
     per job under a shared cluster power budget, re-packing through the
-    heterogeneity-aware ``PowerAwareScheduler`` on every early cap.
+    heterogeneity-aware ``PowerAwareScheduler`` on every early cap — and,
+    with an ``inventory`` attached, surviving membership churn:
+    ``fail_device``/``degrade_device``/``restore_device`` migrate jobs to
+    healthy silicon from their cached decisions (zero re-classification;
+    see ``repro.ft`` and ``benchmarks/bench_chaos.py``).
 """
-from repro.fleet.controller import FleetCapController, FleetJob, FleetResult
-from repro.fleet.inventory import (DeviceInstance, DeviceInventory,
-                                   VariabilityModel)
+from repro.fleet.controller import (FleetCapController, FleetEvent, FleetJob,
+                                    FleetResult)
+from repro.fleet.inventory import (DEGRADED, FAILED, HEALTHY, DeviceInstance,
+                                   DeviceInventory, VariabilityModel)
 from repro.fleet.mux import FleetChunk, FleetTelemetryMux
 
 __all__ = [
     "DeviceInstance", "DeviceInventory", "VariabilityModel",
     "FleetChunk", "FleetTelemetryMux",
-    "FleetCapController", "FleetJob", "FleetResult",
+    "FleetCapController", "FleetEvent", "FleetJob", "FleetResult",
+    "HEALTHY", "DEGRADED", "FAILED",
 ]

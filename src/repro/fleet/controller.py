@@ -23,14 +23,32 @@ stops early on the device — the paper's cost saving).  Packing provisions
 the neighbor's p99 (not p90) per-chip power by default so coincident
 cross-job spikes stay inside the budget; ``benchmarks/bench_fleet.py``
 validates the aggregate simulated fleet trace against it.
+
+Fault tolerance (connects ``repro.ft`` to the fleet): construct with an
+``inventory`` and the controller survives membership churn —
+``fail_device`` migrates every affected job to surviving healthy silicon by
+re-costing its cached ``CapDecision`` selection against the new device's
+effective TDP (``PowerAwareScheduler.migrate_plan``: **zero classifier
+calls**, the same invariant as retire/set_budget), ``degrade_device``
+drains a straggling device proactively, ``restore_device`` returns it to
+the placement pool.  Multi-chip jobs that lose part of their device span
+shrink through ``ft.plan_new_mesh``/``rescale_batch`` instead of migrating
+wholesale.  A ``FleetStragglerAdapter`` wired via ``straggler_adapter``
+turns the mux's per-device chunk cadence into automatic degrade-and-drain.
+``benchmarks/bench_chaos.py`` drives the whole loop under seeded failure
+injection.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.configs.base import MeshConfig
 from repro.core.classify import MinosClassifier
-from repro.fleet.inventory import DeviceInstance
+from repro.fleet.inventory import FAILED, HEALTHY, DeviceInstance, \
+    DeviceInventory
 from repro.fleet.mux import FleetChunk, FleetTelemetryMux
+from repro.ft.elastic import plan_new_mesh, rescale_batch
+from repro.ft.fleetwatch import FleetStragglerAdapter
 from repro.pipeline.builder import ProfileBuilder
 from repro.pipeline.library import ReferenceLibrary
 from repro.pipeline.online import CapDecision, OnlineCapController
@@ -39,11 +57,23 @@ from repro.sched.power_sched import JobPlan, PowerAwareScheduler, \
     ScheduleResult
 
 
+@dataclass(frozen=True)
+class FleetEvent:
+    """One fleet-membership/lifecycle event (JSON-round-trippable via
+    ``repro.api.results``): a failure, a proactive degrade, a restore, or a
+    per-job consequence (migrate / shrink / strand)."""
+    kind: str                    # fail|degrade|restore|migrate|shrink|strand
+    device_id: str               # the device the event is about (source)
+    job_id: str = ""             # affected job ("" = device-level event)
+    to_device_id: str = ""       # migration target ("" = none)
+    detail: str = ""             # human-readable specifics
+
+
 @dataclass
 class FleetJob:
     """One admitted job: its device binding plus the per-job pipeline."""
     job_id: str
-    device: DeviceInstance
+    device: DeviceInstance         # primary device (profiling frame)
     chips: int
     builder: ProfileBuilder
     controller: OnlineCapController
@@ -51,6 +81,10 @@ class FleetJob:
     decision: CapDecision | None = None
     plan: JobPlan | None = None    # built once, when the decision lands
     profile_to_completion: bool = False   # keep building after the decision
+    devices: tuple = ()            # full multi-chip span (defaults (device,))
+    mesh: MeshConfig | None = None        # multi-chip topology (optional)
+    global_batch: int | None = None       # rescaled on elastic shrink
+    needs_reprofile: bool = False  # mid-profile migrant awaiting its re-run
 
 
 @dataclass
@@ -61,10 +95,15 @@ class FleetResult:
     repacks: int = 0             # how many early caps triggered a re-pack
     budget_w: float = 0.0
     chunks_dropped: int = 0      # telemetry skipped after early decisions
+    events: list = field(default_factory=list)   # FleetEvents, in order
 
     @property
     def early_decisions(self) -> int:
         return sum(d.early for d in self.decisions.values())
+
+    @property
+    def migrations(self) -> int:
+        return sum(e.kind in ("migrate", "shrink") for e in self.events)
 
 
 class FleetCapController:
@@ -74,6 +113,13 @@ class FleetCapController:
     a prebuilt ``MinosClassifier`` — shared by every job.  Gate thresholds
     (``min_confidence`` etc.) are forwarded verbatim to each per-job
     controller, so a one-job fleet reproduces the single-job path exactly.
+
+    ``inventory`` (optional) enables the fault-tolerance surface: failed /
+    degraded devices are tracked there and migrations target its healthy
+    view.  ``straggler_adapter`` (optional ``FleetStragglerAdapter``) makes
+    degrade-and-drain automatic from the mux feed's chunk cadence.  Both
+    default off, in which case every code path is byte-identical to the
+    pre-FT controller.
     """
 
     def __init__(self, references, budget_w: float,
@@ -81,7 +127,9 @@ class FleetCapController:
                  provision_quantile="p99",
                  min_confidence: float = 0.3, min_fraction: float = 0.1,
                  min_spike_samples: int = 50,
-                 actuator_factory=SimActuator.for_device):
+                 actuator_factory=SimActuator.for_device,
+                 inventory: DeviceInventory | None = None,
+                 straggler_adapter: FleetStragglerAdapter | None = None):
         if isinstance(references, ReferenceLibrary):
             self.clf = references.classifier()
         elif isinstance(references, MinosClassifier):
@@ -101,24 +149,51 @@ class FleetCapController:
         self.scheduler = PowerAwareScheduler(
             self.clf, tdp_w=0.0, objective=objective,
             quantile=provision_quantile)
+        self.inventory = inventory
+        self.straggler_adapter = straggler_adapter
         self.jobs: dict[str, FleetJob] = {}
         self.repacks: list[ScheduleResult] = []
+        self.events: list[FleetEvent] = []
         self._dropped = 0
+        self._failed_devices: set[str] = set()
 
     # -- admission -------------------------------------------------------
     def admit(self, device: DeviceInstance, meta, chips: int = 1,
               job_id: str | None = None,
-              profile_to_completion: bool = False) -> str:
+              profile_to_completion: bool = False,
+              devices=None, mesh: MeshConfig | None = None,
+              global_batch: int | None = None) -> str:
         """Register a job on ``device``; returns its ``job_id`` (default
         ``"<workload>@<device>"``).  The job's builder normalizes by the
         device's effective TDP — the device-portable frame.
 
         ``profile_to_completion`` keeps ingesting telemetry into the job's
         builder after its cap decision lands (instead of dropping it), so a
-        full-trace profile stays available — the convergence-study mode."""
+        full-trace profile stays available — the convergence-study mode.
+
+        Multi-chip jobs may span several devices: pass the full span as
+        ``devices`` (must include ``device``, which stays the profiling
+        frame) with ``chips`` divided evenly across it, plus an optional
+        ``mesh``/``global_batch`` so a partial device loss can re-mesh
+        through ``ft.plan_new_mesh``/``rescale_batch``."""
         job_id = job_id or f"{meta.name}@{device.device_id}"
         if job_id in self.jobs:
             raise ValueError(f"duplicate job_id {job_id!r}")
+        span = tuple(devices) if devices else (device,)
+        if device not in span:
+            raise ValueError("the primary device must be part of the span")
+        if len({d.device_id for d in span}) != len(span):
+            raise ValueError("duplicate device in job span")
+        if chips % len(span):
+            raise ValueError(f"chips={chips} does not divide evenly across "
+                             f"{len(span)} devices")
+        if self.inventory is not None:
+            for d in span:
+                did = d.device_id
+                if did in self.inventory \
+                        and not self.inventory.is_healthy(did):
+                    raise ValueError(f"cannot admit on {did!r}: device is "
+                                     f"{self.inventory.health(did)}")
         actuator = self.actuator_factory(device) \
             if self.actuator_factory is not None else None
         controller = OnlineCapController(
@@ -128,14 +203,32 @@ class FleetCapController:
             job_id=job_id, device=device, chips=int(chips),
             builder=ProfileBuilder(meta, tdp=device.effective_tdp_w),
             controller=controller, actuator=actuator,
-            profile_to_completion=profile_to_completion)
+            profile_to_completion=profile_to_completion,
+            devices=span, mesh=mesh, global_batch=global_batch)
         return job_id
 
     # -- streaming -------------------------------------------------------
     def ingest(self, fchunk: FleetChunk) -> CapDecision | None:
         """Route one multiplexed chunk to its job.  Returns that job's
         ``CapDecision`` when this chunk tips its confidence gate (which also
-        re-packs the fleet); ``None`` otherwise."""
+        re-packs the fleet); ``None`` otherwise.
+
+        Telemetry from a failed device (in flight when the failure landed)
+        is discarded, as is telemetry for a job that has left the fleet —
+        the wire keeps no promises under churn.  With a straggler adapter
+        attached, every chunk also feeds the per-device cadence monitor and
+        flagged devices are degraded-and-drained automatically."""
+        if self.straggler_adapter is not None:
+            self.straggler_adapter.observe(fchunk)
+            if self.straggler_adapter.should_check():
+                self._auto_degrade()
+        if fchunk.device_id in self._failed_devices:
+            self._dropped += 1
+            return None
+        job = self.jobs.get(fchunk.job_id)
+        if job is None:                    # retired/stranded mid-stream
+            self._dropped += 1
+            return None
         return self.ingest_chunk(fchunk.job_id, fchunk.chunk)
 
     def ingest_chunk(self, job_id: str, chunk) -> CapDecision | None:
@@ -148,6 +241,13 @@ class FleetCapController:
                 return None        # profiling already stopped for this job
             job.builder.ingest(chunk)
             return None            # decision already made; just keep building
+        if job.needs_reprofile:
+            # the partial trace died with the job's old device; without a
+            # device tag on this path we cannot tell the stale stream from
+            # the re-run, so demand an explicit restart
+            raise ValueError(
+                f"job {job_id!r} migrated mid-profile; restart its run via "
+                f"restart_profile()/JobHandle.reprofile() before feeding")
         job.builder.ingest(chunk)
         decision = job.controller.observe(job.builder)
         if decision is None:
@@ -158,16 +258,22 @@ class FleetCapController:
 
     def finalize(self) -> FleetResult:
         """Decide any still-undecided jobs from their completed profiles,
-        re-pack once more, and return the fleet outcome."""
-        pending = [j for j in self.jobs.values() if j.decision is None]
+        re-pack once more, and return the fleet outcome.  Jobs with nothing
+        ingested (e.g. mid-profile migrants whose re-run never arrived —
+        see ``restart_profile``) stay undecided and are left out of the
+        decision map rather than classified from an empty trace."""
+        pending = [j for j in self.jobs.values()
+                   if j.decision is None and j.builder.n_ingested > 0]
         for job in pending:
             self._decide(job, job.controller.finalize(job.builder))
         if pending or not self.repacks:
             self._repack()
         return FleetResult(
-            decisions={j.job_id: j.decision for j in self.jobs.values()},
+            decisions={j.job_id: j.decision for j in self.jobs.values()
+                       if j.decision is not None},
             schedule=self.repacks[-1], repacks=len(self.repacks),
-            budget_w=self.budget_w, chunks_dropped=self._dropped)
+            budget_w=self.budget_w, chunks_dropped=self._dropped,
+            events=list(self.events))
 
     def finalize_job(self, job_id: str) -> CapDecision:
         """Decide one still-undecided job from whatever it has ingested so
@@ -178,6 +284,21 @@ class FleetCapController:
             self._decide(job, job.controller.finalize(job.builder))
             self._repack()
         return job.decision
+
+    def restart_profile(self, job_id: str, meta=None) -> None:
+        """Reset an undecided job's profiling run — the recovery step after
+        a mid-profile migration, whose partial trace died with its device.
+        The fresh builder normalizes by the job's *current* device frame;
+        pass the re-run's ``TraceMeta`` (its sample count differs on the
+        new silicon) or inherit the old one."""
+        job = self.jobs[job_id]
+        if job.decision is not None:
+            raise ValueError(f"job {job_id!r} already decided; nothing to "
+                             f"re-profile")
+        job.builder = ProfileBuilder(meta if meta is not None
+                                     else job.builder.meta,
+                                     tdp=job.device.effective_tdp_w)
+        job.needs_reprofile = False
 
     def run(self, mux: FleetTelemetryMux) -> FleetResult:
         """Pump the multiplexed feed to completion: every chunk is routed,
@@ -205,14 +326,257 @@ class FleetCapController:
         if any(j.plan is not None for j in self.jobs.values()):
             self._repack()
 
+    # -- fault tolerance -------------------------------------------------
+    def fail_device(self, device_id: str) -> list[FleetEvent]:
+        """A device died: mark it failed, stop trusting its telemetry, and
+        migrate every affected job to surviving healthy devices.
+
+        Decided jobs carry their cached ``CapDecision`` selection, so the
+        migration is ``PowerAwareScheduler.migrate_plan`` — a re-costing
+        against the new device's effective TDP with **zero classifier
+        calls** (device-portable classification makes cross-model migration
+        free).  Undecided jobs restart profiling on the target device (the
+        failed device's partial trace is unfinishable).  Multi-chip jobs
+        that only lost part of their span shrink via ``ft.plan_new_mesh``/
+        ``rescale_batch`` instead.  Jobs with nowhere to go are stranded:
+        they leave the packing (drawing no budget) until capacity returns.
+        Ends with a single re-pack of the survivors.
+
+        Returns this failure's events (also appended to ``self.events``)."""
+        inv = self._require_inventory("fail_device")
+        inv.mark_failed(device_id)           # KeyError on unknown device
+        self._failed_devices.add(device_id)
+        return self._drain_device(device_id, FleetEvent("fail", device_id))
+
+    def degrade_device(self, device_id: str) -> list[FleetEvent]:
+        """A device is straggling: mark it degraded and proactively migrate
+        its *decided* jobs to healthy devices (zero classifier calls, as in
+        ``fail_device``).  Undecided jobs keep profiling — the power frame
+        of a slow-but-alive chip is still valid — and migrate the moment
+        they decide.  No-op if the device is already non-healthy."""
+        inv = self._require_inventory("degrade_device")
+        if inv.health(device_id) != HEALTHY:
+            return []
+        inv.mark_degraded(device_id)
+        return self._drain_device(device_id,
+                                  FleetEvent("degrade", device_id),
+                                  decided_only=True)
+
+    def restore_device(self, device_id: str) -> list[FleetEvent]:
+        """The device is back: return it to the healthy placement pool and
+        re-place any stranded jobs — capacity returned, so jobs that had
+        nowhere to go re-plan from their cached decisions (zero classifier
+        calls) and mid-profile strandees re-bind for their re-run.  Healthy
+        placements stay where they are (migration is one-way)."""
+        inv = self._require_inventory("restore_device")
+        prior = inv.health(device_id)
+        inv.restore(device_id)
+        self._failed_devices.discard(device_id)
+        events = [FleetEvent("restore", device_id, detail=f"was {prior}")]
+        replaced = False
+        for job in self.jobs.values():
+            health = inv.health(job.device.device_id)
+            if job.decision is not None and job.plan is None:
+                # stranded (by a fail, or a degrade drain that found no
+                # target): capacity is back, put it somewhere
+                if health == HEALTHY:
+                    job.plan = self._plan_for(job)   # its own device is back
+                    if job.actuator is not None:
+                        job.actuator.set_cap(job.decision.cap)
+                    events.append(FleetEvent(
+                        "migrate", job.device.device_id, job_id=job.job_id,
+                        to_device_id=job.device.device_id,
+                        detail="re-placed after restore"))
+                else:
+                    events.append(self._migrate_job(job,
+                                                    job.device.device_id))
+                replaced = True
+            elif job.decision is None and health == FAILED:
+                # mid-profile resident of a dead device: re-bind it so its
+                # re-run lands on live silicon
+                events.append(self._migrate_job(job, job.device.device_id))
+        self.events.extend(events)
+        if replaced:
+            self._repack()
+        return events
+
+    def device_health(self) -> dict[str, str]:
+        """device_id -> health for the attached inventory ({} if none)."""
+        return {} if self.inventory is None \
+            else dict(self.inventory.device_health)
+
+    def _require_inventory(self, op: str) -> DeviceInventory:
+        if self.inventory is None:
+            raise ValueError(f"{op} needs an inventory of candidate devices;"
+                             f" construct FleetCapController(..., "
+                             f"inventory=...)")
+        return self.inventory
+
+    def _auto_degrade(self) -> None:
+        """Degrade-and-drain devices the straggler adapter flags (only
+        meaningful with an inventory; flagged devices without one are left
+        to the caller via ``straggler_adapter.degraded()``)."""
+        if self.inventory is None:
+            return
+        for device_id in self.straggler_adapter.degraded():
+            if device_id in self.inventory \
+                    and self.inventory.health(device_id) == HEALTHY:
+                self.degrade_device(device_id)
+
+    def _drain_device(self, device_id: str, cause: FleetEvent,
+                      decided_only: bool = False) -> list[FleetEvent]:
+        events = [cause]
+        affected = [j for j in self.jobs.values()
+                    if device_id in {d.device_id for d in j.devices}
+                    and (j.decision is not None or not decided_only)]
+        for job in affected:
+            if len(job.devices) > 1:
+                events.append(self._shrink_job(job, device_id))
+            else:
+                events.append(self._migrate_job(job, device_id))
+        self.events.extend(events)
+        if any(j.plan is not None for j in self.jobs.values()) \
+                or self.repacks:
+            self._repack()
+        return events
+
+    def _placement_load_w(self) -> dict[str, float]:
+        """Planned watts currently bound to each device (for the
+        deterministic least-loaded migration target choice)."""
+        load: dict[str, float] = {}
+        for j in self.jobs.values():
+            if j.plan is not None:
+                load[j.device.device_id] = load.get(j.device.device_id, 0.0) \
+                    + j.plan.predicted_p90_w * j.plan.chips
+        return load
+
+    def _pick_target(self, exclude: set[str]) -> DeviceInstance | None:
+        """Least-loaded healthy device (ties broken by device_id) outside
+        ``exclude`` — deterministic, so a replayed failure schedule yields
+        a byte-identical recovery."""
+        candidates = [d for d in (self.inventory.healthy
+                                  if self.inventory is not None else [])
+                      if d.device_id not in exclude]
+        if not candidates:
+            return None
+        load = self._placement_load_w()
+        return min(candidates,
+                   key=lambda d: (load.get(d.device_id, 0.0), d.device_id))
+
+    def _rebind(self, job: FleetJob, device: DeviceInstance) -> None:
+        """Point a job's actuation + decision tagging at a new device and
+        re-assert its cap there (decided jobs only)."""
+        job.device = device
+        job.controller.device_id = device.device_id
+        job.actuator = self.actuator_factory(device) \
+            if self.actuator_factory is not None else None
+        job.controller.actuator = job.actuator
+        if job.decision is not None and job.actuator is not None:
+            job.actuator.set_cap(job.decision.cap)
+
+    def _migrate_job(self, job: FleetJob, from_device_id: str) -> FleetEvent:
+        target = self._pick_target(exclude={from_device_id})
+        if target is None:
+            # nowhere to go: the job leaves the packing (draws no budget)
+            # but keeps its cached decision for when capacity returns
+            # (restore_device re-places strandees)
+            stranded_plan, job.plan = job.plan, None
+            if job.decision is None:
+                # the partial trace died with the device: drop it so a
+                # later finalize cannot classify from the dead frame
+                job.builder = ProfileBuilder(job.builder.meta,
+                                             tdp=job.device.effective_tdp_w)
+                job.needs_reprofile = True
+            return FleetEvent(
+                "strand", from_device_id, job_id=job.job_id,
+                detail="no healthy device available" if stranded_plan
+                else "no healthy device available; profiling aborted")
+        detail = ""
+        if job.decision is not None:
+            # the free path: re-cost the cached selection on the new device
+            job.plan = self.scheduler.migrate_plan(job.plan or
+                                                   self._plan_for(job),
+                                                   target)
+        else:
+            # mid-profile: the partial trace died with the device — restart
+            # the profiling run in the new device's normalization frame
+            job.builder = ProfileBuilder(job.builder.meta,
+                                         tdp=target.effective_tdp_w)
+            job.needs_reprofile = True
+            detail = "reprofile"
+        self._rebind(job, target)
+        job.devices = (target,)
+        return FleetEvent("migrate", from_device_id, job_id=job.job_id,
+                          to_device_id=target.device_id, detail=detail)
+
+    def _shrink_job(self, job: FleetJob, lost_device_id: str) -> FleetEvent:
+        """Partial span loss for a multi-chip job: keep the survivors and
+        re-mesh down through ``ft.plan_new_mesh`` (model extent preserved,
+        data extent the largest power of two that fits), rescaling the
+        global batch to hold the per-device batch constant."""
+        surviving = tuple(d for d in job.devices
+                          if d.device_id != lost_device_id)
+        chips_per_dev = job.chips // len(job.devices)
+        surviving_chips = chips_per_dev * len(surviving)
+        mesh = job.mesh or MeshConfig(shape=(job.chips, 1),
+                                      axis_names=("data", "model"))
+        try:
+            eplan = plan_new_mesh(mesh, surviving_chips)
+        except RuntimeError:
+            # survivors can't hold the model extent: whole-job migration
+            return self._migrate_job(job, lost_device_id)
+        old_chips = job.chips
+        job.mesh = eplan.new
+        job.chips = eplan.new.num_devices
+        job.devices = surviving
+        if job.global_batch is not None:
+            job.global_batch = rescale_batch(job.global_batch, eplan)
+        if job.device.device_id == lost_device_id:
+            self._rebind(job, surviving[0])
+            if job.decision is None:
+                # the profiling frame was the lost primary: its partial
+                # trace is unfinishable — restart on the new primary
+                job.builder = ProfileBuilder(job.builder.meta,
+                                             tdp=job.device.effective_tdp_w)
+                job.needs_reprofile = True
+        if job.decision is not None:
+            job.plan = self.scheduler.migrate_plan(
+                job.plan or self._plan_for(job), job.device, chips=job.chips)
+        return FleetEvent(
+            "shrink", lost_device_id, job_id=job.job_id,
+            to_device_id=job.device.device_id,
+            detail=f"chips {old_chips}->{job.chips} "
+                   f"(lost={eplan.lost_devices} idle={eplan.idle_devices})")
+
     # -- packing ---------------------------------------------------------
+    def _plan_for(self, job: FleetJob) -> JobPlan:
+        """(Re)build a job's plan from its cached decision selection —
+        never a classification."""
+        return self.scheduler.plan_from_selection(
+            job.decision.selection, job.chips, job.device,
+            job_id=job.job_id)
+
     def _decide(self, job: FleetJob, decision: CapDecision) -> None:
         """Pin a job's decision and build its ``JobPlan`` once, straight
         from the decision's Algorithm 1 selection — re-packs never
-        re-classify."""
+        re-classify.  A job that decides while part of its span sits on a
+        non-healthy device (degraded mid-profile) drains immediately:
+        single-device jobs migrate, multi-chip jobs shrink the bad member
+        away — the deferred half of ``degrade_device``'s contract."""
         job.decision = decision
-        job.plan = self.scheduler.plan_from_selection(
-            decision.selection, job.chips, job.device, job_id=job.job_id)
+        job.plan = self._plan_for(job)
+        if self.inventory is None:
+            return
+        for dev in list(job.devices):
+            did = dev.device_id
+            if dev not in job.devices:         # shrunk away by a prior turn
+                continue
+            if did in self.inventory \
+                    and self.inventory.health(did) != HEALTHY:
+                if len(job.devices) > 1:
+                    self.events.append(self._shrink_job(job, did))
+                else:
+                    self.events.append(self._migrate_job(job, did))
 
     def _repack(self) -> ScheduleResult:
         """Re-pack every decided job (admission order) into the budget."""

@@ -82,15 +82,32 @@ class DeviceInstance:
         return dataclasses.replace(profile, tdp=self.effective_tdp_w)
 
 
+# device health states (the fleet membership-churn model: production
+# telemetry studies show devices fail, degrade, and come back constantly)
+HEALTHY = "healthy"
+DEGRADED = "degraded"       # straggling: still running, proactively drained
+FAILED = "failed"           # gone: jobs must migrate, no new placements
+
+_HEALTH_STATES = (HEALTHY, DEGRADED, FAILED)
+
+
 class DeviceInventory:
     """Ordered collection of ``DeviceInstance``s with deterministic
-    generation and simple lookup/grouping."""
+    generation, simple lookup/grouping, and per-device health state.
+
+    Health is inventory-level (the instances stay frozen value objects):
+    ``mark_failed``/``mark_degraded``/``restore`` move a device between
+    states, ``healthy``/``failed_ids``/``device_health`` are the views the
+    fleet controller schedules against.  A fresh inventory is all-healthy,
+    so the health layer is inert until a failure is injected — the
+    byte-identity pins of the no-failure paths are untouched."""
 
     def __init__(self, devices=()):
         self._devices: list[DeviceInstance] = list(devices)
         ids = [d.device_id for d in self._devices]
         if len(set(ids)) != len(ids):
             raise ValueError("duplicate device_id in inventory")
+        self._health: dict[str, str] = {i: HEALTHY for i in ids}
 
     @classmethod
     def generate(cls, counts: dict[str, int] | int,
@@ -125,6 +142,12 @@ class DeviceInventory:
     def __getitem__(self, i: int) -> DeviceInstance:
         return self._devices[i]
 
+    def __contains__(self, key) -> bool:
+        """O(1) membership by device_id (or a DeviceInstance's id)."""
+        if isinstance(key, DeviceInstance):
+            key = key.device_id
+        return key in self._health
+
     def get(self, device_id: str) -> DeviceInstance:
         for d in self._devices:
             if d.device_id == device_id:
@@ -146,6 +169,56 @@ class DeviceInventory:
     def nameplate_w(self) -> float:
         """Total nameplate TDP across the fleet (per-device, 1 chip each)."""
         return sum(d.nameplate_w for d in self._devices)
+
+    # -- health ----------------------------------------------------------
+    def _set_health(self, device_id: str, state: str) -> None:
+        self.get(device_id)                  # KeyError on unknown device
+        self._health[device_id] = state
+
+    def mark_failed(self, device_id: str) -> None:
+        """The device is gone: it leaves every healthy view until
+        ``restore``; jobs bound to it must migrate."""
+        self._set_health(device_id, FAILED)
+
+    def mark_degraded(self, device_id: str) -> None:
+        """The device is straggling: keep it out of new placements while it
+        drains, but don't treat its telemetry as dead."""
+        self._set_health(device_id, DEGRADED)
+
+    def restore(self, device_id: str) -> None:
+        """The device is back (replaced or recovered): it re-joins the
+        healthy pool and may take new/migrated jobs again."""
+        self._set_health(device_id, HEALTHY)
+
+    def health(self, device_id: str) -> str:
+        self.get(device_id)
+        return self._health[device_id]
+
+    def is_healthy(self, device_id: str) -> bool:
+        return self.health(device_id) == HEALTHY
+
+    @property
+    def device_health(self) -> dict[str, str]:
+        """device_id -> health state for every device, inventory order."""
+        return {d.device_id: self._health[d.device_id]
+                for d in self._devices}
+
+    @property
+    def healthy(self) -> list[DeviceInstance]:
+        """Devices eligible for (new or migrated) placements."""
+        return [d for d in self._devices
+                if self._health[d.device_id] == HEALTHY]
+
+    @property
+    def failed_ids(self) -> list[str]:
+        return [d.device_id for d in self._devices
+                if self._health[d.device_id] == FAILED]
+
+    @property
+    def healthy_nameplate_w(self) -> float:
+        """Nameplate TDP of the surviving (non-failed) devices only."""
+        return sum(d.nameplate_w for d in self._devices
+                   if self._health[d.device_id] != FAILED)
 
     @property
     def homogeneous(self) -> bool:

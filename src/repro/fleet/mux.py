@@ -37,6 +37,8 @@ class FleetTelemetryMux:
     def __init__(self):
         self._jobs: list[tuple[str, str, float, object]] = []
         self._ids: set[str] = set()
+        self._dead_jobs: set[str] = set()
+        self._dead_devices: set[str] = set()
 
     def add_job(self, job_id: str, meta: TraceMeta, chunks,
                 device_id: str | None = None, t_start: float = 0.0) -> None:
@@ -51,6 +53,24 @@ class FleetTelemetryMux:
 
     def __len__(self) -> int:
         return len(self._jobs)
+
+    # -- failure injection -----------------------------------------------
+    def drop_job(self, job_id: str) -> None:
+        """Stop delivering ``job_id``'s chunks (the job migrated or was
+        cancelled mid-stream).  Takes effect immediately, even inside a
+        live iteration: the next chunk due from that stream is discarded
+        and the stream is not pulled again."""
+        self._dead_jobs.add(job_id)
+
+    def drop_device(self, device_id: str) -> None:
+        """A device died: every stream tagged with its ``device_id`` goes
+        silent from this poll on — the wire-level view of a failure.  Safe
+        to call mid-iteration (the failure-injection path)."""
+        self._dead_devices.add(device_id)
+
+    def _is_dead(self, fchunk: FleetChunk) -> bool:
+        return (fchunk.job_id in self._dead_jobs
+                or fchunk.device_id in self._dead_devices)
 
     def _chunk_t_end(self, chunk: TelemetryChunk, t_start: float) -> float:
         n_end = chunk.start_index + len(chunk.energy_j)
@@ -72,8 +92,12 @@ class FleetTelemetryMux:
                                       chunk)))
         while heap:
             _, order, fchunk = heapq.heappop(heap)
+            if self._is_dead(fchunk):
+                continue           # stream went silent: discard, never pull
             yield fchunk
             job_id, did, t_start, it = iters[order]
+            if job_id in self._dead_jobs or did in self._dead_devices:
+                continue           # dropped while the chunk was being handled
             nxt = next(it, None)
             if nxt is not None:
                 t_end = self._chunk_t_end(nxt, t_start)

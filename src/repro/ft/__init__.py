@@ -1,2 +1,8 @@
 from repro.ft.elastic import ElasticPlan, plan_new_mesh, rescale_batch
+from repro.ft.fleetwatch import FleetStragglerAdapter
 from repro.ft.heartbeat import PreemptionHandler, StragglerMonitor
+
+__all__ = [
+    "ElasticPlan", "plan_new_mesh", "rescale_batch",
+    "FleetStragglerAdapter", "PreemptionHandler", "StragglerMonitor",
+]

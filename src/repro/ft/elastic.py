@@ -17,7 +17,20 @@ from repro.configs.base import MeshConfig
 class ElasticPlan:
     old: MeshConfig
     new: MeshConfig
-    lost_devices: int
+    surviving_devices: int
+
+    @property
+    def lost_devices(self) -> int:
+        """Devices actually lost to the failure (NOT devices idled by the
+        power-of-two rounding of the new data extent — see ``idle_devices``)."""
+        return self.old.num_devices - self.surviving_devices
+
+    @property
+    def idle_devices(self) -> int:
+        """Surviving devices the new mesh cannot use: the remainder of the
+        model-axis division plus the power-of-two rounding of the data
+        extent.  They stay healthy and re-join on the next re-mesh."""
+        return self.surviving_devices - self.new.num_devices
 
     @property
     def data_scale(self) -> float:
@@ -36,11 +49,14 @@ def plan_new_mesh(mesh: MeshConfig, surviving_devices: int) -> ElasticPlan:
     while p * 2 <= data:
         p *= 2
     new = MeshConfig(shape=(p, model), axis_names=("data", "model"))
-    return ElasticPlan(old=mesh, new=new,
-                       lost_devices=mesh.num_devices - new.num_devices)
+    return ElasticPlan(old=mesh, new=new, surviving_devices=surviving_devices)
 
 
 def rescale_batch(global_batch: int, plan: ElasticPlan) -> int:
-    """Keep per-device batch constant: shrink global batch with the mesh."""
-    scaled = int(global_batch * plan.data_scale)
-    return max(scaled, 1)
+    """Keep the *integer* per-device batch constant: each surviving data
+    slice keeps exactly the per-device batch it had on the old mesh, so the
+    new global batch is ``per_device * new_data_extent`` (never a truncated
+    float ratio, which could silently change the per-device batch when the
+    old global batch did not divide evenly)."""
+    per_device = max(global_batch // plan.old.data_axis_size, 1)
+    return per_device * plan.new.data_axis_size

@@ -124,6 +124,19 @@ class PowerAwareScheduler:
         return JobPlan(sel.target, chips, cap, rel * watts_base, sel,
                        device_id=did, nameplate_w=nameplate, job_id=job_id)
 
+    def migrate_plan(self, plan: JobPlan, device,
+                     chips: int | None = None) -> JobPlan:
+        """Re-host an existing plan on ``device`` (optionally at a new chip
+        count — the elastic-shrink path): the cached Algorithm 1 selection
+        is re-costed against the new device's effective TDP, so a migration
+        is a dictionary lookup plus arithmetic — **never** a
+        re-classification.  Device-portable classification makes this free:
+        the neighbor's relative power curve is intrinsic to the workload,
+        only the watts conversion is per-device."""
+        return self.plan_from_selection(
+            plan.selection, plan.chips if chips is None else int(chips),
+            device, job_id=plan.job_id)
+
     def pack(self, plans, budget_w: float) -> ScheduleResult:
         """First-fit-decreasing over prebuilt ``JobPlan``s with a
         deterministic tie-break: equal-power jobs pack in (name, device,

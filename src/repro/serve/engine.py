@@ -58,6 +58,9 @@ class ServeEngine:
         b, s = tokens.shape
         if s + num_tokens > self.max_len:
             raise ValueError("prompt + generation exceeds engine max_len")
+        if not greedy and key is None:
+            raise ValueError("sampling (greedy=False) requires a PRNG key; "
+                             "pass key=jax.random.key(...) or use greedy=True")
         logits, caches = self._prefill(params, batch)
         mem_len = batch["frames"].shape[1] if "frames" in batch else None
         caches = self._pad_caches(caches, b, s, memory_len=mem_len)
@@ -65,7 +68,7 @@ class ServeEngine:
         out = []
         for i in range(num_tokens):
             logits = jnp.asarray(logits, jnp.float32)[:, :self.cfg.vocab_size]
-            if greedy or key is None:
+            if greedy:
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
                 key, sub = jax.random.split(key)

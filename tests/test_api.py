@@ -16,6 +16,7 @@ from repro.api import (ACTUATORS, OBJECTIVES, QUANTILES, CapDecision,
                        TPUPowerModel, VariabilityModel, from_dict, from_json,
                        micro_gemm, micro_idle_burst, micro_spmv_compute,
                        micro_spmv_memory, micro_stencil, reference_streams,
+                       count_classifier_calls as _count_classifier_calls,
                        register_actuator, register_objective,
                        register_quantile, stream_profile_workload,
                        stream_telemetry, to_dict, to_json)
@@ -115,19 +116,6 @@ def test_session_byte_identical_to_fleet_controller(micro_library):
 # ---------------------------------------------------------------------------
 # acceptance pin: dynamic lifecycle never re-classifies on re-pack
 # ---------------------------------------------------------------------------
-def _count_classifier_calls(clf):
-    calls = {"n": 0}
-    for name in ("power_neighbors", "util_neighbors", "power_top2"):
-        orig = getattr(clf, name)
-
-        def wrapped(*a, _orig=orig, **k):
-            calls["n"] += 1
-            return _orig(*a, **k)
-
-        setattr(clf, name, wrapped)
-    return calls
-
-
 def test_submit_feed_retire_submit_repacks_without_reclassify(micro_library):
     session = MinosSession(micro_library, **GATES)
     calls = _count_classifier_calls(session.classifier)

@@ -20,6 +20,7 @@ FACADE_FILES = [
     "examples/fleet_power_planner.py",
     "benchmarks/bench_fleet.py",
     "benchmarks/bench_online_cap.py",
+    "benchmarks/bench_chaos.py",
 ]
 
 ALLOWED_MODULES = ("repro.api", "repro.fleet")

@@ -30,13 +30,20 @@ def test_generate_shapes_and_determinism():
     assert np.all(out1 >= 0) and np.all(out1 < cfg.vocab_size)
 
 
-def test_generate_rejects_overflow():
+def test_generate_rejects_overflow_and_keyless_sampling():
     cfg = ARCHS["glm4-9b"].reduced(num_layers=2)
     eng = ServeEngine(cfg, SMOKE_TOPO, max_len=20)
     params = eng.init_params(jax.random.key(0))
     batch = {"tokens": np.zeros((1, 16), np.int32)}
     with pytest.raises(ValueError):
         eng.generate(params, batch, 10)
+    # sampling without a PRNG key must raise, not silently fall back to
+    # greedy decoding
+    with pytest.raises(ValueError, match="requires a PRNG key"):
+        eng.generate(params, batch, 2, greedy=False)
+    out = eng.generate(params, batch, 2, greedy=False,
+                       key=jax.random.key(1))
+    assert out.shape == (1, 2)
 
 
 def _ref(name, lvl, sm, dram, freq_sensitivity=1.0):
