@@ -56,6 +56,9 @@ from repro.pipeline.online import CapDecision, OnlineCapController
 from repro.sched.dvfs import FrequencyActuator, SimActuator
 from repro.sched.power_sched import (JobPlan, PowerAwareScheduler,
                                      ScheduleResult)
+from repro.store import (EventJournal, JournalRecord, NoStoreError,
+                         SessionStore, SnapshotStore, StoreError,
+                         store_report, windowed_report)
 from repro.telemetry.kernel_stream import (Kernel, KernelStream, build_stream,
                                            micro_gemm, micro_idle_burst,
                                            micro_spmv_compute,
@@ -89,6 +92,9 @@ __all__ = [
     "FleetCapController", "FleetResult", "FleetChunk", "FleetTelemetryMux",
     # fault tolerance
     "FleetEvent", "FleetStragglerAdapter", "StragglerMonitor",
+    # durable sessions (repro.store)
+    "SessionStore", "EventJournal", "JournalRecord", "SnapshotStore",
+    "NoStoreError", "StoreError", "store_report", "windowed_report",
     # actuation / scheduling
     "FrequencyActuator", "SimActuator", "PowerAwareScheduler",
     # telemetry + workload zoo

@@ -26,34 +26,39 @@ names — so a deployment is one JSON document away from a running session.
 """
 from __future__ import annotations
 
+import difflib
 import json
 import math
 import os
+import warnings
 
 from repro.api.registry import ACTUATORS, OBJECTIVES, QUANTILES
 from repro.core.algorithm1 import resolve_objective
 from repro.fleet.controller import FleetCapController, FleetEvent, FleetJob
-from repro.fleet.inventory import DeviceInstance, DeviceInventory, \
-    VariabilityModel
+from repro.fleet.inventory import DEGRADED, FAILED, DeviceInstance, \
+    DeviceInventory, VariabilityModel
 from repro.fleet.mux import FleetTelemetryMux
+from repro.fleet.records import device_from_record, device_record, \
+    mesh_from_record, mesh_record, meta_from_record, meta_record
 from repro.ft.fleetwatch import FleetStragglerAdapter
 from repro.ft.heartbeat import StragglerMonitor
-from repro.pipeline.builder import PartialProfile
+from repro.pipeline.builder import PartialProfile, ProfileBuilder
 from repro.pipeline.online import CapDecision
 from repro.sched.dvfs import FrequencyActuator
 from repro.sched.power_sched import JobPlan
+from repro.store import NoStoreError, SessionStore, StoreError
 from repro.telemetry.kernel_stream import KernelStream
 from repro.telemetry.simulator import TelemetryChunk, TraceMeta, \
     stream_telemetry
 
-from repro.api.results import SessionReport
+from repro.api.results import SessionReport, from_dict, to_dict
 
 _GATE_KEYS = ("min_confidence", "min_fraction", "min_spike_samples")
 _STRAGGLER_KEYS = ("window", "k", "min_samples")
 _CONFIG_KEYS = frozenset({"library", "devices", "variability", "seed",
                           "objective", "actuator", "quantile", "budget_w",
                           "budget_fraction_of_nameplate", "gates",
-                          "stragglers"})
+                          "stragglers", "store"})
 
 
 class JobHandle:
@@ -195,7 +200,7 @@ class MinosSession:
                  budget_w: float = math.inf, objective="powercentric",
                  actuator="sim", quantile="p99",
                  min_confidence: float = 0.3, min_fraction: float = 0.1,
-                 min_spike_samples: int = 50, stragglers=None):
+                 min_spike_samples: int = 50, stragglers=None, store=None):
         """``references`` is a ``ReferenceLibrary`` (preferred: warm
         classifier), a ``MinosClassifier``, or a profile list.  ``objective``
         / ``actuator`` / ``quantile`` accept registry names (see
@@ -206,7 +211,14 @@ class MinosSession:
         ``ft.StragglerMonitor`` (or a prebuilt ``FleetStragglerAdapter``, or
         ``True`` for monitor defaults) and the fleet flags devices whose
         telemetry cadence falls behind, migrating their decided jobs to
-        healthy silicon without a single re-classification."""
+        healthy silicon without a single re-classification.
+
+        ``store`` opts into durability: pass a directory path (or a
+        prebuilt ``repro.store.SessionStore``) and every admit, decision,
+        plan, retirement, budget change, and device-health transition is
+        journaled write-ahead — ``MinosSession.resume(path)`` reconstructs
+        the session after a crash with zero classifier calls.  Without a
+        store every code path is byte-identical to the store-less session."""
         self.library = references        # whatever was handed in (may be lib)
         self.inventory = inventory
         self._objective = self._resolve_objective(objective)
@@ -224,6 +236,11 @@ class MinosSession:
         self._retired: dict[str, CapDecision | None] = {}
         self._rr = 0                     # round-robin cursor over inventory
         self._default_device: DeviceInstance | None = None
+        self._actuator_name = actuator if isinstance(actuator, str) else None
+        self._library_path = None        # set when built via from_config
+        self._store: SessionStore | None = None
+        if store is not None:
+            self._init_store(store)
 
     # -- plugin resolution ----------------------------------------------
     @staticmethod
@@ -278,7 +295,10 @@ class MinosSession:
             ``min_spike_samples`` overrides;
           * ``stragglers`` — ``true`` (monitor defaults) or a
             ``window``/``k``/``min_samples`` dict: proactive
-            degrade-and-drain of devices whose telemetry cadence lags.
+            degrade-and-drain of devices whose telemetry cadence lags;
+          * ``store`` — durable-session directory (must be fresh): every
+            mutation is journaled write-ahead so a crashed session can be
+            reconstructed with ``MinosSession.resume(path)``.
         """
         if isinstance(config, (str, os.PathLike)):
             text = str(config)
@@ -291,7 +311,12 @@ class MinosSession:
                              f"got {type(config).__name__}")
         unknown = set(config) - _CONFIG_KEYS
         if unknown:
-            raise ValueError(f"unknown config keys {sorted(unknown)}; "
+            labels = []
+            for key in sorted(unknown):
+                close = difflib.get_close_matches(key, _CONFIG_KEYS, n=1)
+                labels.append(f"{key!r} (did you mean {close[0]!r}?)"
+                              if close else repr(key))
+            raise ValueError(f"unknown config keys {', '.join(labels)}; "
                              f"recognized: {sorted(_CONFIG_KEYS)}")
 
         if references is None:
@@ -343,11 +368,286 @@ class MinosSession:
         elif stragglers not in (None, True, False):
             raise ValueError(f"stragglers must be true or a monitor-params "
                              f"dict, got {stragglers!r}")
-        return cls(references, inventory=inventory, budget_w=budget_w,
-                   objective=config.get("objective", "powercentric"),
-                   actuator=config.get("actuator", "sim"),
-                   quantile=config.get("quantile", "p99"),
-                   stragglers=stragglers, **gates)
+        session = cls(references, inventory=inventory, budget_w=budget_w,
+                      objective=config.get("objective", "powercentric"),
+                      actuator=config.get("actuator", "sim"),
+                      quantile=config.get("quantile", "p99"),
+                      stragglers=stragglers, **gates)
+        if "library" in config:
+            session._library_path = str(config["library"])
+        if "store" in config:
+            session._init_store(config["store"])
+        return session
+
+    # -- durability ------------------------------------------------------
+    @classmethod
+    def resume(cls, path, references=None, fsync: bool = False) \
+            -> "MinosSession":
+        """Reconstruct a crashed session from its store directory.
+
+        Loads the latest intact snapshot and replays the journal tail: every
+        cached ``CapDecision``/``JobPlan`` and device-health transition is
+        re-adopted verbatim — **zero classifier calls**.  Torn journal tails
+        are truncated with a warning; a corrupt latest snapshot falls back
+        to its predecessor (longer replay).  Jobs that were still profiling
+        when the process died lost their in-flight telemetry (chunks are
+        not journaled) and come back flagged ``needs_reprofile`` — restart
+        them via ``JobHandle.reprofile``.
+
+        ``references`` is only needed when the original session was built
+        around an in-memory reference library; sessions created through
+        ``from_config({"library": ...})`` reload it from the recorded path.
+
+        Raises ``repro.store.NoStoreError`` when ``path`` holds no store at
+        all, ``repro.store.StoreError`` when a store exists but cannot be
+        reconstructed."""
+        store = SessionStore.open_existing(str(path), encode=to_dict,
+                                           fsync=fsync)
+        opened = store.recovered_records[0]
+        if opened.kind != "open":
+            store.close()
+            raise StoreError(
+                f"session store at {str(path)!r} is corrupt: the journal "
+                f"begins with a {opened.kind!r} record instead of the "
+                f"session 'open' record, so the session's construction "
+                f"facts are lost and it cannot be reconstructed.")
+        cfg = opened.data
+        if references is None:
+            if cfg.get("library") is None:
+                store.close()
+                raise ValueError(
+                    "this store's session was built from an in-memory "
+                    "reference library (no 'library' path was recorded); "
+                    "pass the references object to resume()")
+            from repro.pipeline.library import ReferenceLibrary
+            references = ReferenceLibrary.load(cfg["library"])
+        inventory = None
+        if cfg.get("devices"):
+            inventory = DeviceInventory(
+                [device_from_record(d) for d in cfg["devices"]])
+        session = cls(
+            references, inventory=inventory,
+            budget_w=from_dict(cfg.get("budget_w", math.inf)),
+            objective=cfg.get("objective", "powercentric"),
+            actuator=cfg.get("actuator") or "sim",
+            quantile=cfg.get("quantile", "p99"),
+            stragglers=cls._stragglers_from_record(cfg.get("stragglers")),
+            **(cfg.get("gates") or {}))
+        session._library_path = cfg.get("library")
+        state, snap_seq = store.load_snapshot()
+        if state is not None:
+            session._restore_state(state)
+        for rec in store.records(after_seq=snap_seq):
+            session._apply_record(rec)
+        for job in session._fleet.jobs.values():
+            if job.decision is None:
+                # the in-flight partial trace died with the process:
+                # demand a fresh profiling run (PR 5 migration semantics)
+                job.builder = ProfileBuilder(
+                    job.builder.meta, tdp=job.device.effective_tdp_w)
+                job.needs_reprofile = True
+            elif job.actuator is not None and job.plan is not None:
+                job.actuator.set_cap(job.decision.cap)
+        fleet = session._fleet
+        if not fleet.repacks \
+                and any(j.plan is not None for j in fleet.jobs.values()):
+            fleet._repack()
+        session._attach_store(store)
+        store.record("resume", last_seq=store.journal.last_seq,
+                     snapshot_seq=snap_seq)
+        store.flush_snapshot(force=True)
+        return session
+
+    @property
+    def store(self) -> SessionStore | None:
+        """The attached durable session store (``None`` = not durable)."""
+        return self._store
+
+    def close(self) -> None:
+        """Flush a final snapshot and release the store's file handles (a
+        no-op for store-less sessions).  The session object stays usable,
+        but further mutations are no longer journaled."""
+        if self._store is not None:
+            self._store.flush_snapshot(force=True)
+            self._store.close()
+            self._store = None
+            self._fleet.journal = None
+
+    def _init_store(self, store) -> None:
+        """Attach a FRESH store and durably pin the session's construction
+        facts as its ``open`` record."""
+        if not isinstance(store, SessionStore):
+            store = SessionStore.create(str(store), encode=to_dict)
+        if store.journal.last_seq > 0 or store.recovered_records:
+            path = store.path
+            store.close()
+            raise ValueError(
+                f"store at {path!r} already holds a session journal; "
+                f"continue it with MinosSession.resume({path!r}) or point "
+                f"'store' at a fresh directory")
+        self._attach_store(store)
+        store.record("open", **self._open_record())
+
+    def _attach_store(self, store: SessionStore) -> None:
+        self._store = store
+        store.encode = to_dict           # session payloads are typed results
+        store.capture = self._capture_state
+        self._fleet.journal = store
+
+    def _open_record(self) -> dict:
+        """The construction facts ``resume`` rebuilds the session from.
+        Policies are recorded by registry name — custom objective/actuator/
+        quantile *objects* are not serializable, so resume falls back to
+        the defaults for any axis that was not name-resolved."""
+        return {
+            "objective": self.objective,
+            "actuator": self._actuator_name,
+            "quantile": self._quantile_name(),
+            "budget_w": self._fleet.budget_w,
+            "gates": dict(self._fleet._gates),
+            "devices": [device_record(d) for d in self.inventory]
+                       if self.inventory is not None else None,
+            "stragglers": self._straggler_record(
+                self._fleet.straggler_adapter),
+            "library": self._library_path,
+        }
+
+    def _quantile_name(self):
+        q = self._quantile
+        return q if isinstance(q, str) or q is None \
+            else getattr(q, "name", None)
+
+    @staticmethod
+    def _straggler_record(adapter) -> dict | None:
+        if adapter is None:
+            return None
+        monitor = adapter.monitor
+        return {"window": monitor.window, "k": monitor.k,
+                "min_samples": monitor.min_samples,
+                "check_every": adapter.check_every}
+
+    @staticmethod
+    def _stragglers_from_record(rec):
+        if not rec:
+            return None
+        return FleetStragglerAdapter(
+            StragglerMonitor(window=rec["window"], k=rec["k"],
+                             min_samples=rec["min_samples"]),
+            check_every=rec.get("check_every", 8))
+
+    def _capture_state(self) -> dict:
+        """The full JSON-ready session state for one snapshot: restoring it
+        and replaying the journal records past its sequence number is
+        equivalent to replaying the whole journal."""
+        fleet = self._fleet
+        jobs = []
+        for job in fleet.jobs.values():
+            jobs.append({
+                "job_id": job.job_id,
+                "device": device_record(job.device),
+                "chips": job.chips,
+                "meta": meta_record(job.builder.meta),
+                "profile_to_completion": job.profile_to_completion,
+                "devices": [device_record(d) for d in job.devices],
+                "mesh": mesh_record(job.mesh),
+                "global_batch": job.global_batch,
+                "decision": to_dict(job.decision)
+                            if job.decision is not None else None,
+                "plan": to_dict(job.plan) if job.plan is not None else None,
+                "needs_reprofile": job.needs_reprofile,
+            })
+        return {
+            "budget_w": to_dict(fleet.budget_w),
+            "jobs": jobs,
+            "retired": {job_id: to_dict(d) if d is not None else None
+                        for job_id, d in self._retired.items()},
+            "events": [to_dict(e) for e in fleet.events],
+            "device_health": fleet.device_health(),
+            "failed_devices": sorted(fleet._failed_devices),
+            "repacks": len(fleet.repacks),
+            "schedule": to_dict(fleet.repacks[-1]) if fleet.repacks else None,
+            "dropped": fleet._dropped,
+            "rr": self._rr,
+        }
+
+    def _restore_state(self, state: dict) -> None:
+        """Materialize a snapshot: jobs are re-admitted with their recorded
+        decisions/plans adopted verbatim (never re-derived), then health is
+        applied directly — the consequences a live ``fail_device`` would
+        trigger are already part of the snapshot, so no drain logic runs."""
+        fleet = self._fleet
+        for rec in state["jobs"]:
+            self._replay_admit(rec)
+            job = fleet.jobs[rec["job_id"]]
+            if rec["decision"] is not None:
+                job.decision = from_dict(rec["decision"])
+            if rec["plan"] is not None:
+                job.plan = from_dict(rec["plan"])
+            job.needs_reprofile = bool(rec["needs_reprofile"])
+        if self.inventory is not None:
+            for device_id, health in state["device_health"].items():
+                if health == FAILED:
+                    self.inventory.mark_failed(device_id)
+                elif health == DEGRADED:
+                    self.inventory.mark_degraded(device_id)
+        fleet._failed_devices = set(state["failed_devices"])
+        fleet.budget_w = from_dict(state["budget_w"])
+        fleet.events = [from_dict(e) for e in state["events"]]
+        fleet._dropped = int(state["dropped"])
+        self._rr = int(state["rr"])
+        self._retired = {job_id: from_dict(d) if d is not None else None
+                         for job_id, d in state["retired"].items()}
+        if state["schedule"] is not None:
+            # only len() and [-1] are ever observed, so padding with the
+            # final schedule preserves both without storing the whole trail
+            fleet.repacks = [from_dict(state["schedule"])] \
+                * max(int(state["repacks"]), 1)
+
+    def _replay_admit(self, rec: dict) -> None:
+        device = device_from_record(rec["device"])
+        meta = meta_from_record(rec["meta"])
+        self._fleet.admit(
+            device, meta, chips=int(rec["chips"]), job_id=rec["job_id"],
+            profile_to_completion=bool(rec["profile_to_completion"]),
+            devices=[device_from_record(d) for d in rec["devices"]],
+            mesh=mesh_from_record(rec["mesh"]),
+            global_batch=rec["global_batch"])
+        self._handles[rec["job_id"]] = JobHandle(
+            self, self._fleet.jobs[rec["job_id"]], meta, None)
+
+    def _apply_record(self, rec) -> None:
+        """Replay one journal record against the live (store-detached)
+        session.  Only *causes* replay; consequence ``event`` records are
+        informational (the deterministic controller logic regenerates the
+        identical events), and ``open``/``resume`` are markers."""
+        kind, data = rec.kind, rec.data
+        if kind in ("open", "event", "resume"):
+            return
+        if kind == "admit":
+            self._replay_admit(data)
+        elif kind == "decision":
+            job = self._fleet.jobs[data["job_id"]]
+            self._fleet._decide(job, from_dict(data["decision"]),
+                                plan=from_dict(data["plan"]))
+            self._fleet._repack()
+        elif kind == "retire":
+            self.retire(data["job_id"])
+        elif kind == "budget":
+            self._fleet.set_budget(from_dict(data["budget_w"]))
+        elif kind == "fail":
+            self._fleet.fail_device(data["device"])
+        elif kind == "degrade":
+            self._fleet.degrade_device(data["device"])
+        elif kind == "restore":
+            self._fleet.restore_device(data["device"])
+        elif kind == "reprofile":
+            self._fleet.restart_profile(data["job_id"],
+                                        meta_from_record(data["meta"]))
+        elif kind == "cursor":
+            self._rr = int(data["rr"])
+        else:
+            warnings.warn(f"journal record {rec.seq} has unknown kind "
+                          f"{kind!r}; skipping it", RuntimeWarning)
 
     # -- introspection ---------------------------------------------------
     @property
@@ -401,9 +701,15 @@ class MinosSession:
         ``chips`` divided evenly across it, plus an optional ``mesh`` /
         ``global_batch`` — a partial device loss then shrinks the job
         through the elastic re-mesh instead of migrating it wholesale."""
+        rr_before = self._rr
         device = self._resolve_device(device)
         if devices is not None:
             devices = tuple(self._resolve_device(d) for d in devices)
+        if self._store is not None and self._rr != rr_before:
+            # auto-placement advanced the round-robin cursor: journal it
+            # (before the admit record) so replayed sessions keep placing
+            # later submits on the same devices
+            self._store.record("cursor", rr=self._rr)
         chunks = None
         if isinstance(source, KernelStream):
             meta, chunks = stream_telemetry(

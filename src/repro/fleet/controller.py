@@ -47,6 +47,7 @@ from repro.core.classify import MinosClassifier
 from repro.fleet.inventory import FAILED, HEALTHY, DeviceInstance, \
     DeviceInventory
 from repro.fleet.mux import FleetChunk, FleetTelemetryMux
+from repro.fleet.records import device_record, meta_record, mesh_record
 from repro.ft.elastic import plan_new_mesh, rescale_batch
 from repro.ft.fleetwatch import FleetStragglerAdapter
 from repro.pipeline.builder import ProfileBuilder
@@ -129,7 +130,8 @@ class FleetCapController:
                  min_spike_samples: int = 50,
                  actuator_factory=SimActuator.for_device,
                  inventory: DeviceInventory | None = None,
-                 straggler_adapter: FleetStragglerAdapter | None = None):
+                 straggler_adapter: FleetStragglerAdapter | None = None,
+                 journal=None):
         if isinstance(references, ReferenceLibrary):
             self.clf = references.classifier()
         elif isinstance(references, MinosClassifier):
@@ -151,11 +153,39 @@ class FleetCapController:
             quantile=provision_quantile)
         self.inventory = inventory
         self.straggler_adapter = straggler_adapter
+        # write-ahead session store (repro.store.SessionStore), attached by
+        # MinosSession when configured with a store path; None = no
+        # durability, every code path byte-identical to the store-less
+        # controller
+        self.journal = journal
         self.jobs: dict[str, FleetJob] = {}
         self.repacks: list[ScheduleResult] = []
         self.events: list[FleetEvent] = []
         self._dropped = 0
         self._failed_devices: set[str] = set()
+
+    # -- durability ------------------------------------------------------
+    def _journal(self, kind: str, **data) -> None:
+        """Write-ahead: durably record a mutation *before* applying it.
+        No-op without an attached session store."""
+        if self.journal is not None:
+            self.journal.record(kind, **data)
+
+    def _emit(self, events) -> None:
+        """Append lifecycle events, journaling each as an informational
+        record.  Consequence events (migrate/shrink/strand) are reproduced
+        by re-running the deterministic controller logic during recovery,
+        so replay skips these records — they exist for reports."""
+        for ev in events:
+            self._journal("event", event=ev)
+        self.events.extend(events)
+
+    def _sync_store(self) -> None:
+        """Let the store write its cadence snapshot now that the mutation
+        the latest records describe has fully applied (a snapshot taken
+        mid-mutation would lose the in-flight record on replay)."""
+        if self.journal is not None:
+            self.journal.flush_snapshot()
 
     # -- admission -------------------------------------------------------
     def admit(self, device: DeviceInstance, meta, chips: int = 1,
@@ -194,6 +224,12 @@ class FleetCapController:
                         and not self.inventory.is_healthy(did):
                     raise ValueError(f"cannot admit on {did!r}: device is "
                                      f"{self.inventory.health(did)}")
+        self._journal(
+            "admit", job_id=job_id, device=device_record(device),
+            chips=int(chips), meta=meta_record(meta),
+            profile_to_completion=bool(profile_to_completion),
+            devices=[device_record(d) for d in span],
+            mesh=mesh_record(mesh), global_batch=global_batch)
         actuator = self.actuator_factory(device) \
             if self.actuator_factory is not None else None
         controller = OnlineCapController(
@@ -205,6 +241,7 @@ class FleetCapController:
             controller=controller, actuator=actuator,
             profile_to_completion=profile_to_completion,
             devices=span, mesh=mesh, global_batch=global_batch)
+        self._sync_store()
         return job_id
 
     # -- streaming -------------------------------------------------------
@@ -254,6 +291,7 @@ class FleetCapController:
             return None
         self._decide(job, decision)
         self._repack()
+        self._sync_store()
         return decision
 
     def finalize(self) -> FleetResult:
@@ -268,6 +306,7 @@ class FleetCapController:
             self._decide(job, job.controller.finalize(job.builder))
         if pending or not self.repacks:
             self._repack()
+        self._sync_store()
         return FleetResult(
             decisions={j.job_id: j.decision for j in self.jobs.values()
                        if j.decision is not None},
@@ -283,6 +322,7 @@ class FleetCapController:
         if job.decision is None:
             self._decide(job, job.controller.finalize(job.builder))
             self._repack()
+            self._sync_store()
         return job.decision
 
     def restart_profile(self, job_id: str, meta=None) -> None:
@@ -295,10 +335,11 @@ class FleetCapController:
         if job.decision is not None:
             raise ValueError(f"job {job_id!r} already decided; nothing to "
                              f"re-profile")
-        job.builder = ProfileBuilder(meta if meta is not None
-                                     else job.builder.meta,
-                                     tdp=job.device.effective_tdp_w)
+        meta = meta if meta is not None else job.builder.meta
+        self._journal("reprofile", job_id=job_id, meta=meta_record(meta))
+        job.builder = ProfileBuilder(meta, tdp=job.device.effective_tdp_w)
         job.needs_reprofile = False
+        self._sync_store()
 
     def run(self, mux: FleetTelemetryMux) -> FleetResult:
         """Pump the multiplexed feed to completion: every chunk is routed,
@@ -314,17 +355,23 @@ class FleetCapController:
         its budget share.  If the job was planned, the survivors re-pack
         into the freed budget — from their cached ``JobPlan``s, so a
         retirement never re-classifies anything."""
-        job = self.jobs.pop(job_id)    # KeyError on unknown/already-retired
+        if job_id not in self.jobs:    # KeyError on unknown/already-retired
+            raise KeyError(job_id)
+        self._journal("retire", job_id=job_id)
+        job = self.jobs.pop(job_id)
         if job.plan is not None:
             self._repack()
+        self._sync_store()
         return job
 
     def set_budget(self, budget_w: float) -> None:
         """Change the shared power budget; re-packs the decided jobs against
         the new ceiling (cached plans only — no re-classification)."""
+        self._journal("budget", budget_w=float(budget_w))
         self.budget_w = float(budget_w)
         if any(j.plan is not None for j in self.jobs.values()):
             self._repack()
+        self._sync_store()
 
     # -- fault tolerance -------------------------------------------------
     def fail_device(self, device_id: str) -> list[FleetEvent]:
@@ -344,9 +391,13 @@ class FleetCapController:
 
         Returns this failure's events (also appended to ``self.events``)."""
         inv = self._require_inventory("fail_device")
-        inv.mark_failed(device_id)           # KeyError on unknown device
+        inv.get(device_id)                   # KeyError on unknown device
+        self._journal("fail", device=device_id)
+        inv.mark_failed(device_id)
         self._failed_devices.add(device_id)
-        return self._drain_device(device_id, FleetEvent("fail", device_id))
+        events = self._drain_device(device_id, FleetEvent("fail", device_id))
+        self._sync_store()
+        return events
 
     def degrade_device(self, device_id: str) -> list[FleetEvent]:
         """A device is straggling: mark it degraded and proactively migrate
@@ -357,10 +408,13 @@ class FleetCapController:
         inv = self._require_inventory("degrade_device")
         if inv.health(device_id) != HEALTHY:
             return []
+        self._journal("degrade", device=device_id)
         inv.mark_degraded(device_id)
-        return self._drain_device(device_id,
-                                  FleetEvent("degrade", device_id),
-                                  decided_only=True)
+        events = self._drain_device(device_id,
+                                    FleetEvent("degrade", device_id),
+                                    decided_only=True)
+        self._sync_store()
+        return events
 
     def restore_device(self, device_id: str) -> list[FleetEvent]:
         """The device is back: return it to the healthy placement pool and
@@ -370,6 +424,7 @@ class FleetCapController:
         placements stay where they are (migration is one-way)."""
         inv = self._require_inventory("restore_device")
         prior = inv.health(device_id)
+        self._journal("restore", device=device_id)
         inv.restore(device_id)
         self._failed_devices.discard(device_id)
         events = [FleetEvent("restore", device_id, detail=f"was {prior}")]
@@ -395,9 +450,10 @@ class FleetCapController:
                 # mid-profile resident of a dead device: re-bind it so its
                 # re-run lands on live silicon
                 events.append(self._migrate_job(job, job.device.device_id))
-        self.events.extend(events)
+        self._emit(events)
         if replaced:
             self._repack()
+        self._sync_store()
         return events
 
     def device_health(self) -> dict[str, str]:
@@ -434,7 +490,7 @@ class FleetCapController:
                 events.append(self._shrink_job(job, device_id))
             else:
                 events.append(self._migrate_job(job, device_id))
-        self.events.extend(events)
+        self._emit(events)
         if any(j.plan is not None for j in self.jobs.values()) \
                 or self.repacks:
             self._repack()
@@ -549,22 +605,32 @@ class FleetCapController:
                    f"(lost={eplan.lost_devices} idle={eplan.idle_devices})")
 
     # -- packing ---------------------------------------------------------
-    def _plan_for(self, job: FleetJob) -> JobPlan:
+    def _plan_for(self, job: FleetJob, selection=None) -> JobPlan:
         """(Re)build a job's plan from its cached decision selection —
-        never a classification."""
+        never a classification.  ``selection`` overrides for the moment a
+        decision lands (the job field is not assigned yet)."""
         return self.scheduler.plan_from_selection(
-            job.decision.selection, job.chips, job.device,
-            job_id=job.job_id)
+            job.decision.selection if selection is None else selection,
+            job.chips, job.device, job_id=job.job_id)
 
-    def _decide(self, job: FleetJob, decision: CapDecision) -> None:
+    def _decide(self, job: FleetJob, decision: CapDecision,
+                plan: JobPlan | None = None) -> None:
         """Pin a job's decision and build its ``JobPlan`` once, straight
         from the decision's Algorithm 1 selection — re-packs never
         re-classify.  A job that decides while part of its span sits on a
         non-healthy device (degraded mid-profile) drains immediately:
         single-device jobs migrate, multi-chip jobs shrink the bad member
-        away — the deferred half of ``degrade_device``'s contract."""
+        away — the deferred half of ``degrade_device``'s contract.
+
+        The decision record is journaled *with* its plan before either is
+        adopted, so crash recovery re-adopts both verbatim (``plan`` is the
+        replay path's verbatim hand-back)."""
+        if plan is None:
+            plan = self._plan_for(job, selection=decision.selection)
+        self._journal("decision", job_id=job.job_id, decision=decision,
+                      plan=plan)
         job.decision = decision
-        job.plan = self._plan_for(job)
+        job.plan = plan
         if self.inventory is None:
             return
         for dev in list(job.devices):
@@ -574,9 +640,9 @@ class FleetCapController:
             if did in self.inventory \
                     and self.inventory.health(did) != HEALTHY:
                 if len(job.devices) > 1:
-                    self.events.append(self._shrink_job(job, did))
+                    self._emit([self._shrink_job(job, did)])
                 else:
-                    self.events.append(self._migrate_job(job, did))
+                    self._emit([self._migrate_job(job, did)])
 
     def _repack(self) -> ScheduleResult:
         """Re-pack every decided job (admission order) into the budget."""

@@ -200,6 +200,7 @@ class ProfileBuilder:
             raise ValueError("energy_j and busy_s readings differ in length")
         if len(er) == 0:
             return
+        self._validate_chunk(chunk, er, br)
         # differentiate the counters against the running prefix state
         de = np.diff(np.concatenate([[self._energy_j], er]))
         db = np.diff(np.concatenate([[self._busy_s], br]))
@@ -213,6 +214,33 @@ class ProfileBuilder:
         filt = self._ema.ingest(p_raw)
         if len(filt):
             self._absorb(filt, self._take_busy(len(filt)))
+
+    def _validate_chunk(self, chunk: TelemetryChunk, er: np.ndarray,
+                        br: np.ndarray) -> None:
+        """Reject poisoned telemetry before any state mutates: NaN/negative
+        counters and regressing readings raise here, with the job/device
+        context, and the builder — hence every later snapshot and spike
+        histogram — is left exactly as it was."""
+        where = f"job {self.meta.name!r}"
+        if self.meta.device_id:
+            where += f" on device {self.meta.device_id!r}"
+        dt = chunk.sample_dt
+        if not np.isfinite(dt) or dt <= 0:
+            raise ValueError(
+                f"{where}: chunk at sample {chunk.start_index} has "
+                f"non-positive/non-finite sample_dt {dt!r} (sample "
+                f"timestamps must advance monotonically)")
+        for label, readings, prev in (("energy_j", er, self._energy_j),
+                                      ("busy_s", br, self._busy_s)):
+            if not np.all(np.isfinite(readings)):
+                raise ValueError(
+                    f"{where}: chunk at sample {chunk.start_index} has "
+                    f"NaN/non-finite {label} counter readings")
+            if readings[0] < prev or np.any(np.diff(readings) < 0):
+                raise ValueError(
+                    f"{where}: {label} counter goes backwards in the chunk "
+                    f"at sample {chunk.start_index} (cumulative counters "
+                    f"must be non-negative and non-decreasing)")
 
     def _take_busy(self, n: int) -> np.ndarray:
         buf = np.concatenate(self._busy_queue)

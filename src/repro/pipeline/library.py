@@ -25,6 +25,8 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import warnings
+import zipfile
 
 import numpy as np
 
@@ -236,17 +238,29 @@ class ReferenceLibrary:
         lib_meta_path = os.path.join(directory, _LIBRARY_META)
         cache_path = os.path.join(directory, _SPIKE_CACHE)
         if os.path.exists(lib_meta_path) and os.path.exists(cache_path):
-            with open(lib_meta_path) as f:
-                lm = json.load(f)
-            lib.version = int(lm.get("version", 1))
-            lib.bin_sizes = tuple(float(c) for c in lm.get(
-                "bin_sizes", DEFAULT_BIN_SIZES))
-            lib.built_on = lm.get("built_on", "")
-            if lm.get("fingerprint") == lib.fingerprint():
-                with np.load(cache_path) as cache:
-                    lib._spike = {float(k[2:]): np.asarray(cache[k],
-                                                           np.float64)
-                                  for k in cache.files}
+            # the warm-start cache is an optimization, never a dependency: a
+            # corrupt/truncated library.json or spike_cache.npz degrades to
+            # the cold matrix rebuild (bit-identical results, just slower)
+            # instead of failing the load
+            try:
+                with open(lib_meta_path) as f:
+                    lm = json.load(f)
+                lib.version = int(lm.get("version", 1))
+                lib.bin_sizes = tuple(float(c) for c in lm.get(
+                    "bin_sizes", DEFAULT_BIN_SIZES))
+                lib.built_on = lm.get("built_on", "")
+                if lm.get("fingerprint") == lib.fingerprint():
+                    with np.load(cache_path) as cache:
+                        spike = {float(k[2:]): np.asarray(cache[k],
+                                                          np.float64)
+                                 for k in cache.files}
+                    lib._spike = spike
+            except (OSError, EOFError, ValueError, KeyError,
+                    zipfile.BadZipFile) as e:
+                warnings.warn(
+                    f"spike cache under {directory!r} is corrupt or "
+                    f"truncated ({type(e).__name__}: {e}); falling back to "
+                    f"a cold spike-matrix rebuild", RuntimeWarning)
         return lib
 
     @classmethod

@@ -1,0 +1,151 @@
+"""Append-only write-ahead event journal (the durability primitive).
+
+One ``journal.jsonl`` file per session store: every record is a single
+JSON line carrying a monotonically increasing sequence number, a wall-clock
+timestamp, a record kind, an arbitrary JSON payload, and a sha256 checksum
+over the canonical encoding of the other four fields.  Records are written
+*before* the mutation they describe takes effect (write-ahead semantics),
+flushed per record, and optionally fsynced.
+
+Crash tolerance is asymmetric by design: appends are cheap and optimistic,
+recovery is paranoid.  ``EventJournal.recover`` replays the file line by
+line and stops at the FIRST sign of damage — a line without a trailing
+newline (torn write), unparseable JSON, a checksum mismatch, or a sequence
+break — warning and discarding everything from that point on (a corrupt
+record invalidates its successors: they may describe state that was never
+reached).  Re-opening a journal for append truncates the file back to the
+last intact record, so the recovered session and the on-disk tail agree.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+import warnings
+from dataclasses import dataclass
+
+JOURNAL_FILE = "journal.jsonl"
+
+_CANONICAL = dict(sort_keys=True, separators=(",", ":"), allow_nan=False)
+
+
+def _checksum(seq: int, ts: float, kind: str, data) -> str:
+    body = json.dumps({"seq": seq, "ts": ts, "kind": kind, "data": data},
+                      **_CANONICAL)
+    return hashlib.sha256(body.encode()).hexdigest()
+
+
+@dataclass(frozen=True)
+class JournalRecord:
+    """One durably recorded session event."""
+    seq: int                     # 1-based, strictly consecutive
+    ts: float                    # wall-clock append time (time.time())
+    kind: str                    # admit|decision|retire|budget|fail|...
+    data: dict                   # JSON-ready payload (pre-encoded by caller)
+
+
+class EventJournal:
+    """Append-only JSONL journal with per-record checksums."""
+
+    def __init__(self, path: str, fsync: bool = False,
+                 start_seq: int = 0):
+        self.path = path
+        self.fsync = bool(fsync)
+        self._seq = int(start_seq)
+        self._fh = None
+
+    @property
+    def last_seq(self) -> int:
+        return self._seq
+
+    def _handle(self):
+        if self._fh is None:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            self._fh = open(self.path, "a", encoding="utf-8")
+        return self._fh
+
+    # -- writing ---------------------------------------------------------
+    def append(self, kind: str, data: dict, ts: float | None = None) -> int:
+        """Durably record one event; returns its sequence number.  The line
+        hits the OS (flush) before this returns — and the disk, with
+        ``fsync`` — so a crash immediately after sees the record."""
+        seq = self._seq + 1
+        ts = time.time() if ts is None else float(ts)
+        rec = {"seq": seq, "ts": ts, "kind": str(kind), "data": data}
+        rec["sha"] = _checksum(seq, ts, rec["kind"], data)
+        fh = self._handle()
+        fh.write(json.dumps(rec, **_CANONICAL) + "\n")
+        fh.flush()
+        if self.fsync:
+            os.fsync(fh.fileno())
+        self._seq = seq
+        return seq
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- recovery --------------------------------------------------------
+    @staticmethod
+    def recover(path: str) -> tuple[list[JournalRecord], int]:
+        """Read every intact record, tolerating a damaged tail.
+
+        Returns ``(records, good_bytes)`` where ``good_bytes`` is the byte
+        offset just past the last intact record — the truncation point for
+        re-opening the journal in append mode.  Never raises on damage:
+        torn/corrupt tails produce a ``RuntimeWarning`` and are dropped."""
+        records: list[JournalRecord] = []
+        good = 0
+        with open(path, "rb") as f:
+            raw = f.read()
+        for line in raw.split(b"\n"):
+            end = good + len(line) + 1          # +1 for the newline
+            if end > len(raw):
+                if line.strip():
+                    warnings.warn(
+                        f"journal {path}: torn record after seq "
+                        f"{records[-1].seq if records else 0} (no trailing "
+                        f"newline); truncating the damaged tail",
+                        RuntimeWarning)
+                break
+            if not line.strip():
+                good = end
+                continue
+            reason = None
+            try:
+                rec = json.loads(line)
+                seq, ts = int(rec["seq"]), float(rec["ts"])
+                kind, data, sha = rec["kind"], rec["data"], rec["sha"]
+                if sha != _checksum(seq, ts, kind, data):
+                    reason = "checksum mismatch"
+                elif seq != (records[-1].seq if records else 0) + 1:
+                    reason = f"sequence break (got {seq})"
+            except (ValueError, KeyError, TypeError) as e:
+                reason = f"unparseable record ({type(e).__name__})"
+            if reason is not None:
+                warnings.warn(
+                    f"journal {path}: {reason} after seq "
+                    f"{records[-1].seq if records else 0}; truncating the "
+                    f"damaged tail", RuntimeWarning)
+                break
+            records.append(JournalRecord(seq=seq, ts=ts, kind=kind,
+                                         data=data))
+            good = end
+        return records, good
+
+    @classmethod
+    def open_existing(cls, path: str,
+                      fsync: bool = False) -> tuple["EventJournal",
+                                                    list[JournalRecord]]:
+        """Recover ``path`` and open it for appending: the file is truncated
+        back to its last intact record so new appends extend clean state."""
+        records, good = cls.recover(path)
+        size = os.path.getsize(path)
+        if good < size:
+            with open(path, "r+b") as f:
+                f.truncate(good)
+        journal = cls(path, fsync=fsync,
+                      start_seq=records[-1].seq if records else 0)
+        return journal, records

@@ -1,0 +1,121 @@
+"""Windowed reports derived from the event journal.
+
+The journal is the source of truth for everything a ``SessionReport``
+summarizes — so operational reports (utilization, headroom, migration
+counts over time windows) are computed here straight from the recovered
+records, without a live session and without importing ``repro.api``.
+Payloads are consumed as the raw JSON-ready dicts the codec produced
+(``__type__`` tags are ignored, ``__float__`` tags are decoded locally).
+"""
+from __future__ import annotations
+
+import math
+import os
+
+from .journal import JOURNAL_FILE, EventJournal, JournalRecord
+
+
+def _num(value, default: float = 0.0) -> float:
+    """Decode a journal number: plain float/int or a ``__float__`` tag."""
+    if isinstance(value, dict) and set(value) == {"__float__"}:
+        return float(value["__float__"])
+    if isinstance(value, (int, float)):
+        return float(value)
+    return default
+
+
+def _fields(record) -> tuple[int, float, str, dict]:
+    if isinstance(record, JournalRecord):
+        return record.seq, record.ts, record.kind, record.data
+    return (int(record["seq"]), float(record["ts"]),
+            str(record["kind"]), record.get("data", {}))
+
+
+def _blank_window(start: float, end: float) -> dict:
+    return {"start": start, "end": end, "records": 0,
+            "admits": 0, "decisions": 0, "retires": 0,
+            "migrations": 0, "shrinks": 0, "strands": 0,
+            "failures": 0, "degrades": 0, "restores": 0}
+
+
+def windowed_report(records, window_s: float = 60.0) -> list[dict]:
+    """Aggregate journal ``records`` into consecutive time windows.
+
+    Each window reports event counts (admits, decisions, retires,
+    migrations, shrinks, strands, device failures/degrades/restores) plus
+    the power picture at the window's close: ``planned_w`` (sum of the
+    predicted p90 draw of every decided, still-active plan), ``budget_w``,
+    ``headroom_w`` and ``utilization`` (``planned_w / budget_w``, ``None``
+    under an unbounded budget).  Windows with no records are still emitted
+    so the timeline has no gaps.
+    """
+    window_s = float(window_s)
+    if window_s <= 0:
+        raise ValueError(f"window_s must be positive, got {window_s}")
+    rows = sorted((_fields(r) for r in records), key=lambda f: f[0])
+    if not rows:
+        return []
+
+    budget_w = math.inf
+    planned: dict[str, float] = {}       # job_id -> predicted p90 watts
+    windows: list[dict] = []
+    origin = rows[0][1]
+
+    def _close(win):
+        total = sum(planned.values())
+        win["planned_w"] = total
+        win["budget_w"] = budget_w
+        win["headroom_w"] = budget_w - total
+        win["utilization"] = (total / budget_w
+                              if math.isfinite(budget_w) and budget_w > 0
+                              else None)
+        windows.append(win)
+
+    win = _blank_window(origin, origin + window_s)
+    for _seq, ts, kind, data in rows:
+        while ts >= win["end"]:
+            _close(win)
+            win = _blank_window(win["end"], win["end"] + window_s)
+        win["records"] += 1
+        if kind == "open":
+            budget_w = _num(data.get("budget_w"), math.inf)
+        elif kind == "budget":
+            budget_w = _num(data.get("budget_w"), math.inf)
+        elif kind == "admit":
+            win["admits"] += 1
+        elif kind == "decision":
+            win["decisions"] += 1
+            plan = data.get("plan") or {}
+            job_id = plan.get("job_id") or data.get("job_id", "")
+            planned[job_id] = _num(plan.get("predicted_p90_w"))
+        elif kind == "retire":
+            win["retires"] += 1
+            planned.pop(data.get("job_id", ""), None)
+        elif kind == "fail":
+            win["failures"] += 1
+        elif kind == "degrade":
+            win["degrades"] += 1
+        elif kind == "restore":
+            win["restores"] += 1
+        elif kind == "event":
+            ev = data.get("event") or {}
+            ev_kind = ev.get("kind", "")
+            if ev_kind == "migrate":
+                win["migrations"] += 1
+            elif ev_kind == "shrink":
+                win["shrinks"] += 1
+            elif ev_kind == "strand":
+                win["strands"] += 1
+        elif kind == "reprofile":
+            planned.pop(data.get("job_id", ""), None)
+    _close(win)
+    return windows
+
+
+def store_report(path: str, window_s: float = 60.0) -> list[dict]:
+    """``windowed_report`` over the journal found in store ``path``."""
+    journal_path = os.path.join(path, JOURNAL_FILE)
+    if not os.path.exists(journal_path):
+        raise FileNotFoundError(f"no {JOURNAL_FILE} under {path!r}")
+    records, _ = EventJournal.recover(journal_path)
+    return windowed_report(records, window_s=window_s)

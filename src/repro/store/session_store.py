@@ -1,0 +1,143 @@
+"""SessionStore: one directory = one durable session.
+
+Layout::
+
+    <store>/
+        journal.jsonl            append-only write-ahead event journal
+        snapshot-<seq>.json      checksummed state snapshots (latest 2 kept)
+
+The store is codec-agnostic: callers hand it an ``encode`` callable (the
+session passes ``repro.api.results.to_dict``) so ``repro.store`` never
+imports ``repro.api`` — payloads are encoded to JSON-ready dicts at record
+time and handed back verbatim on recovery.
+
+Snapshot cadence is record-count based (``snapshot_every``).  Writing a
+snapshot synchronously inside :meth:`record` would capture state *before*
+the just-journaled mutation applies, so reaching the cadence only marks a
+snapshot as *due*; the session calls :meth:`flush_snapshot` after each
+completed mutation, at which point the captured state includes everything
+up to ``journal.last_seq``.
+"""
+from __future__ import annotations
+
+import os
+
+from .journal import JOURNAL_FILE, EventJournal, JournalRecord
+from .snapshots import SnapshotStore
+
+SNAPSHOT_EVERY = 25              # journal records between snapshots
+
+
+class StoreError(RuntimeError):
+    """A session store could not be opened (distinct from 'no store')."""
+
+
+class NoStoreError(StoreError):
+    """The path holds no session store at all (nothing to resume)."""
+
+
+def _identity(obj):
+    return obj
+
+
+class SessionStore:
+    """Write-ahead journal + snapshot cadence for one session directory."""
+
+    def __init__(self, path: str, *, encode=None, fsync: bool = False,
+                 snapshot_every: int = SNAPSHOT_EVERY):
+        self.path = path
+        self.encode = encode or _identity
+        self.capture = None          # zero-arg state capture (session-set)
+        self.snapshot_every = max(int(snapshot_every), 1)
+        self.snapshots = SnapshotStore(path, fsync=fsync)
+        self.journal: EventJournal | None = None
+        self._recovered: list[JournalRecord] = []
+        self._since_snapshot = 0
+        self._snapshot_due = False
+        self._fsync = bool(fsync)
+
+    # -- opening ---------------------------------------------------------
+    @classmethod
+    def create(cls, path: str, *, encode=None, fsync: bool = False,
+               snapshot_every: int = SNAPSHOT_EVERY) -> "SessionStore":
+        """Open ``path`` for a NEW session, extending any existing journal."""
+        store = cls(path, encode=encode, fsync=fsync,
+                    snapshot_every=snapshot_every)
+        journal_path = os.path.join(path, JOURNAL_FILE)
+        if os.path.exists(journal_path):
+            store.journal, store._recovered = EventJournal.open_existing(
+                journal_path, fsync=fsync)
+        else:
+            store.journal = EventJournal(journal_path, fsync=fsync)
+        return store
+
+    @classmethod
+    def open_existing(cls, path: str, *, encode=None, fsync: bool = False,
+                      snapshot_every: int = SNAPSHOT_EVERY) -> "SessionStore":
+        """Open ``path`` for resume.  Raises :class:`NoStoreError` when the
+        path holds no store at all, :class:`StoreError` when a store exists
+        but every record in it is damaged beyond recovery."""
+        journal_path = os.path.join(path, JOURNAL_FILE)
+        if not os.path.isdir(path) or not os.path.exists(journal_path):
+            raise NoStoreError(
+                f"no session store at {path!r}: the directory "
+                f"{'exists but ' if os.path.isdir(path) else 'does not exist and '}"
+                f"holds no {JOURNAL_FILE}. Pass the directory given as the "
+                f"'store' config key of the session you want to resume.")
+        store = cls(path, encode=encode, fsync=fsync,
+                    snapshot_every=snapshot_every)
+        store.journal, store._recovered = EventJournal.open_existing(
+            journal_path, fsync=fsync)
+        if not store._recovered:
+            raise StoreError(
+                f"session store at {path!r} is corrupt: {JOURNAL_FILE} "
+                f"exists but contains no intact records. The session cannot "
+                f"be reconstructed; start fresh with "
+                f"from_config({{'store': ...}}) on a new directory.")
+        return store
+
+    # -- recovered state -------------------------------------------------
+    @property
+    def recovered_records(self) -> list[JournalRecord]:
+        """Every intact journal record found when the store was opened."""
+        return self._recovered
+
+    def records(self, after_seq: int = 0) -> list[JournalRecord]:
+        """Recovered records with ``seq > after_seq`` (the replay tail)."""
+        return [r for r in self._recovered if r.seq > after_seq]
+
+    def load_snapshot(self) -> tuple[dict | None, int]:
+        """Latest usable snapshot ``(state, seq)``; ``(None, 0)`` if none.
+        Snapshots past the recovered journal tip (describing state a
+        truncated journal can no longer reach) are skipped."""
+        return self.snapshots.load_latest(
+            max_seq=self.journal.last_seq if self.journal else None)
+
+    # -- writing ---------------------------------------------------------
+    def record(self, kind: str, **data) -> int:
+        """Journal one event (write-ahead: call BEFORE applying the
+        mutation).  Payload values pass through ``encode``."""
+        seq = self.journal.append(kind, {k: self.encode(v)
+                                         for k, v in data.items()})
+        self._since_snapshot += 1
+        if self._since_snapshot >= self.snapshot_every:
+            self._snapshot_due = True
+        return seq
+
+    def flush_snapshot(self, capture=None, force: bool = False) -> bool:
+        """Write a snapshot if one is due (or ``force``).  ``capture`` is a
+        zero-arg callable returning the JSON-ready session state (defaults
+        to the attached ``self.capture``); it runs only when a snapshot is
+        actually written.  With no capture available the due flag persists,
+        so the next flush with one still writes."""
+        capture = capture if capture is not None else self.capture
+        if not (self._snapshot_due or force) or capture is None:
+            return False
+        self.snapshots.write(capture(), self.journal.last_seq)
+        self._since_snapshot = 0
+        self._snapshot_due = False
+        return True
+
+    def close(self) -> None:
+        if self.journal is not None:
+            self.journal.close()

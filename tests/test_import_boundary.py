@@ -21,6 +21,7 @@ FACADE_FILES = [
     "benchmarks/bench_fleet.py",
     "benchmarks/bench_online_cap.py",
     "benchmarks/bench_chaos.py",
+    "benchmarks/bench_recovery.py",
 ]
 
 ALLOWED_MODULES = ("repro.api", "repro.fleet")

@@ -1,0 +1,568 @@
+"""Durable-session acceptance (PR 6): write-ahead journal + snapshot store.
+
+The contracts pinned here:
+
+  * **crash-at-any-point equivalence** — truncate the journal after ANY
+    record, resume, and the reconstructed decisions / plans / device
+    health / events are byte-identical to the live session at that point,
+    with **zero classifier calls** (the `count_classifier_calls` spy);
+  * **torn tails and corrupt snapshots never crash recovery** — damaged
+    journal tails are truncated with a warning, a corrupt latest snapshot
+    falls back to its predecessor (N-1 retention);
+  * **store-inert-by-default** — a session without a ``store`` key takes
+    exactly the pre-store code paths and produces identical outcomes;
+  * the satellite hardening: poisoned telemetry cannot corrupt a later
+    snapshot, and a corrupt spike cache degrades to a cold rebuild.
+"""
+import glob
+import json
+import math
+import os
+import shutil
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (DeviceInventory, EventJournal, MinosSession,
+                       NoStoreError, ProfileBuilder, ReferenceLibrary,
+                       SessionStore, SnapshotStore, StoreError,
+                       TPUPowerModel, TraceMeta, VariabilityModel,
+                       count_classifier_calls, micro_gemm, micro_idle_burst,
+                       micro_spmv_memory, micro_stencil, store_report,
+                       stream_profile_workload, stream_telemetry, to_dict,
+                       windowed_report)
+from repro.store.journal import JOURNAL_FILE
+from repro.telemetry.simulator import TelemetryChunk
+
+MODEL = TPUPowerModel()
+TDP = MODEL.spec.tdp_w
+FREQS = (0.6, 0.8, 1.0)
+GATES = dict(min_confidence=0.2, min_fraction=0.1, min_spike_samples=50)
+
+
+@pytest.fixture(scope="module")
+def micro_library():
+    return ReferenceLibrary(
+        (stream_profile_workload(s, MODEL, FREQS, TDP, seed=i,
+                                 target_duration=0.5)
+         for i, s in enumerate([micro_gemm(), micro_idle_burst(),
+                                micro_spmv_memory(), micro_stencil()])),
+        built_on="tpu-v5e")
+
+
+def _inventory():
+    return DeviceInventory.generate({"tpu-v5e": 3, "tpu-v5p": 2},
+                                    VariabilityModel(), seed=7)
+
+
+def _telemetry(stream, seed):
+    return stream_telemetry(stream, 1.0, MODEL, seed=seed,
+                            target_duration=0.5)
+
+
+def _state(session) -> dict:
+    """JSON-comparable view of everything resume must reproduce."""
+    fleet = session._fleet
+    return {
+        "job_ids": sorted(fleet.jobs),
+        "decisions": {jid: to_dict(j.decision) for jid, j in
+                      fleet.jobs.items() if j.decision is not None},
+        "plans": {jid: to_dict(j.plan) for jid, j in fleet.jobs.items()
+                  if j.plan is not None},
+        "health": fleet.device_health(),
+        "events": [to_dict(e) for e in fleet.events],
+        "retired": {jid: to_dict(d) if d is not None else None
+                    for jid, d in session._retired.items()},
+        "budget": to_dict(fleet.budget_w),
+        "failed": sorted(fleet._failed_devices),
+        "rr": session._rr,
+    }
+
+
+def _drive_scripted(session, record_boundary=None):
+    """The chaos script every store test replays: submits, an early
+    decision, a failure, a budget squeeze, a degrade, a retire, and a
+    restore — every journaled mutation kind appears at least once.
+    ``record_boundary(tag)`` is called after each step."""
+    mark = record_boundary or (lambda tag: None)
+    mark("open")
+    a = session.submit(_telemetry(micro_gemm(), 100), chips=4)
+    mark("submit-a")
+    a.run()
+    mark("decide-a")
+    b = session.submit(_telemetry(micro_spmv_memory(), 101), chips=2)
+    mark("submit-b")
+    session.fail_device(a.device.device_id)
+    mark("fail")
+    session.set_budget(5000.0)
+    mark("budget")
+    c = session.submit(_telemetry(micro_stencil(), 102), chips=1)
+    mark("submit-c")
+    session.run()
+    mark("run")
+    session.degrade_device(c.device.device_id)
+    mark("degrade")
+    session.retire(a.job_id)
+    mark("retire")
+    session.restore_device(sorted(session._fleet._failed_devices)[0])
+    mark("restore")
+    return session
+
+
+@pytest.fixture(scope="module")
+def scripted_store(micro_library, tmp_path_factory):
+    """One scripted durable run: returns (store_path, boundaries) where
+    boundaries maps journal seq -> the live session state at that point."""
+    path = str(tmp_path_factory.mktemp("store") / "session")
+    session = MinosSession(micro_library, inventory=_inventory(),
+                           budget_w=20000.0, store=path, **GATES)
+    boundaries = {}
+
+    def mark(tag):
+        boundaries[session.store.journal.last_seq] = (tag, _state(session))
+
+    _drive_scripted(session, mark)
+    session.close()
+    return path, boundaries
+
+
+def _truncate_journal(src: str, dst: str, keep_records: int) -> None:
+    """Copy a store, keeping only the first ``keep_records`` journal
+    records — the on-disk picture of a crash right after that append."""
+    shutil.rmtree(dst, ignore_errors=True)
+    shutil.copytree(src, dst)
+    jp = os.path.join(dst, JOURNAL_FILE)
+    with open(jp, "rb") as f:
+        lines = f.read().splitlines(keepends=True)
+    with open(jp, "wb") as f:
+        f.writelines(lines[:keep_records])
+
+
+def _resume_spied(path, micro_library):
+    """Resume with the classifier spied from before construction; returns
+    (session, calls)."""
+    clf = micro_library.classifier()
+    calls = count_classifier_calls(clf)
+    session = MinosSession.resume(path, references=clf)
+    return session, calls
+
+
+# ---------------------------------------------------------------------------
+# tentpole: crash-at-any-point equivalence, zero classifier calls
+# ---------------------------------------------------------------------------
+def test_resume_at_every_boundary_is_byte_identical(scripted_store,
+                                                    micro_library, tmp_path):
+    path, boundaries = scripted_store
+    for seq, (tag, expected) in boundaries.items():
+        crash = str(tmp_path / f"crash-{seq}")
+        _truncate_journal(path, crash, seq)
+        session, calls = _resume_spied(crash, micro_library)
+        assert calls["n"] == 0, \
+            f"resume at {tag!r} (seq {seq}) re-classified {calls['n']}x"
+        got = _state(session)
+        assert got == expected, f"state diverged at boundary {tag!r}"
+        # jobs that were still profiling lost their in-flight telemetry:
+        # they must come back flagged for an explicit re-run
+        for job in session._fleet.jobs.values():
+            if job.decision is None:
+                assert job.needs_reprofile
+
+
+def test_resume_after_any_single_record_never_crashes(scripted_store,
+                                                      micro_library,
+                                                      tmp_path):
+    """Crash points BETWEEN session-level operations (mid-drain, between a
+    cause record and its consequence events) must still resume cleanly —
+    write-ahead redo semantics — with zero classifier calls throughout."""
+    path, _ = scripted_store
+    with open(os.path.join(path, JOURNAL_FILE), "rb") as f:
+        total = len(f.read().splitlines())
+    clf = micro_library.classifier()
+    calls = count_classifier_calls(clf)
+    for keep in range(1, total + 1):
+        crash = str(tmp_path / "crash")
+        _truncate_journal(path, crash, keep)
+        session = MinosSession.resume(crash, references=clf)
+        assert session.report() is not None
+    assert calls["n"] == 0
+
+
+def test_resume_with_torn_journal_tail(scripted_store, micro_library,
+                                       tmp_path):
+    """A partially flushed last record (no newline / garbage bytes) is
+    truncated with a warning; the session recovers to the last intact
+    record's state."""
+    path, boundaries = scripted_store
+    last_seq = max(boundaries)
+    crash = str(tmp_path / "torn")
+    _truncate_journal(path, crash, last_seq)
+    with open(os.path.join(crash, JOURNAL_FILE), "ab") as f:
+        f.write(b'{"seq": 999, "ts": 0.0, "kind": "bud')   # torn mid-write
+    with pytest.warns(RuntimeWarning, match="torn record"):
+        session, calls = _resume_spied(crash, micro_library)
+    assert calls["n"] == 0
+    assert _state(session) == boundaries[last_seq][1]
+
+
+def test_resume_with_corrupt_middle_record_truncates_tail(scripted_store,
+                                                          micro_library,
+                                                          tmp_path):
+    """A checksum-corrupt record invalidates everything after it (those
+    records describe state that may never have been reached): recovery
+    keeps the clean prefix and warns."""
+    path, _ = scripted_store
+    crash = str(tmp_path / "corrupt")
+    shutil.rmtree(crash, ignore_errors=True)
+    shutil.copytree(path, crash)
+    for snap in glob.glob(os.path.join(crash, "snapshot-*.json")):
+        os.remove(snap)                   # force pure journal replay
+    jp = os.path.join(crash, JOURNAL_FILE)
+    with open(jp, "rb") as f:
+        lines = f.read().splitlines(keepends=True)
+    victim = len(lines) // 2
+    lines[victim] = lines[victim].replace(b'"kind"', b'"kinX"', 1)
+    with open(jp, "wb") as f:
+        f.writelines(lines)
+    with pytest.warns(RuntimeWarning):
+        session, calls = _resume_spied(crash, micro_library)
+    assert calls["n"] == 0
+    assert session.store.journal.last_seq >= victim
+
+
+def test_resume_with_corrupt_latest_snapshot_falls_back(scripted_store,
+                                                        micro_library,
+                                                        tmp_path):
+    """N-1 rollback: flipping bytes in the newest snapshot forces the
+    previous snapshot (or full replay) — same reconstructed state."""
+    path, boundaries = scripted_store
+    crash = str(tmp_path / "badsnap")
+    shutil.rmtree(crash, ignore_errors=True)
+    shutil.copytree(path, crash)
+    snaps = sorted(glob.glob(os.path.join(crash, "snapshot-*.json")))
+    assert snaps, "scripted run should have written snapshots"
+    with open(snaps[-1], "r+b") as f:
+        f.seek(20)
+        f.write(b"XXXXXX")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        session, calls = _resume_spied(crash, micro_library)
+    assert calls["n"] == 0
+    assert _state(session) == boundaries[max(boundaries)][1]
+
+
+def test_reprofile_after_resume_reproduces_decision(scripted_store,
+                                                    micro_library, tmp_path):
+    """A mid-profile job resumes via needs_reprofile: feeding it raises
+    until JobHandle.reprofile, and re-running the SAME stream/seed yields
+    the byte-identical decision the uninterrupted session reached."""
+    path, boundaries = scripted_store
+    submit_b = next(seq for seq, (tag, _) in boundaries.items()
+                    if tag == "submit-b")
+    final_states = boundaries[max(boundaries)][1]
+    crash = str(tmp_path / "reprofile")
+    _truncate_journal(path, crash, submit_b)
+    session, calls = _resume_spied(crash, micro_library)
+    # at this boundary A is decided and B is the lone mid-profile job
+    b_id = next(jid for jid, j in session._fleet.jobs.items()
+                if j.decision is None)
+    handle = session.jobs[b_id]
+    _, probe = _telemetry(micro_spmv_memory(), 101)
+    with pytest.raises(ValueError, match="restart"):
+        handle.feed(next(iter(probe)))
+    assert calls["n"] == 0                 # resume itself never classified
+    handle.reprofile(_telemetry(micro_spmv_memory(), 101))
+    handle.run()
+    got = to_dict(handle.decision())
+    expect = final_states["decisions"][b_id]
+    # same stream, same seed, same device frame -> byte-identical decision
+    # (the device tag survives, too: the job was re-admitted on its device)
+    assert got == expect
+
+
+# ---------------------------------------------------------------------------
+# store-inert-by-default + transparent journaling
+# ---------------------------------------------------------------------------
+def test_store_inert_by_default(micro_library):
+    session = MinosSession(micro_library, inventory=_inventory(),
+                           budget_w=20000.0, **GATES)
+    assert session.store is None and session._fleet.journal is None
+    _drive_scripted(session)
+    session.close()                        # no-op without a store
+    assert session.report() is not None
+
+
+def test_stored_session_behaves_identically(micro_library, tmp_path):
+    """Attaching a store must not perturb a single decision, plan, event,
+    or placement — durability is observation, not interference."""
+    plain = MinosSession(micro_library, inventory=_inventory(),
+                         budget_w=20000.0, **GATES)
+    stored = MinosSession(micro_library, inventory=_inventory(),
+                          budget_w=20000.0, store=str(tmp_path / "s"),
+                          **GATES)
+    assert _state(_drive_scripted(plain)) \
+        == _state(_drive_scripted(stored))
+    stored.close()
+
+
+def test_from_config_store_key(micro_library, tmp_path):
+    path = str(tmp_path / "cfg-store")
+    session = MinosSession.from_config(
+        {"devices": {"tpu-v5e": 2}, "budget_w": 1500.0, "store": path},
+        references=micro_library)
+    assert session.store is not None
+    assert os.path.exists(os.path.join(path, JOURNAL_FILE))
+    session.submit(_telemetry(micro_gemm(), 5)).run()
+    session.close()
+    resumed = MinosSession.resume(path, references=micro_library)
+    assert len(resumed._fleet.jobs) == 1
+    resumed.close()
+
+
+def test_fresh_store_refuses_existing_journal(micro_library, tmp_path):
+    path = str(tmp_path / "reused")
+    MinosSession(micro_library, store=path, **GATES).close()
+    with pytest.raises(ValueError, match="already holds a session journal"):
+        MinosSession(micro_library, store=path, **GATES)
+
+
+# ---------------------------------------------------------------------------
+# satellite: actionable resume errors (no store vs corrupt store)
+# ---------------------------------------------------------------------------
+def test_resume_errors_distinguish_missing_from_corrupt(micro_library,
+                                                        tmp_path):
+    with pytest.raises(NoStoreError, match="no session store"):
+        MinosSession.resume(str(tmp_path / "nowhere"),
+                            references=micro_library)
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(NoStoreError, match="no session store"):
+        MinosSession.resume(str(empty), references=micro_library)
+    corrupt = tmp_path / "corrupt"
+    corrupt.mkdir()
+    (corrupt / JOURNAL_FILE).write_text("this is not a journal\n")
+    with pytest.raises(StoreError, match="corrupt"), \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        MinosSession.resume(str(corrupt), references=micro_library)
+    assert issubclass(NoStoreError, StoreError)   # one except catches both
+
+
+def test_from_config_unknown_key_suggests(micro_library):
+    with pytest.raises(ValueError, match="did you mean 'budget_w'"):
+        MinosSession.from_config({"budgett_w": 1.0},
+                                 references=micro_library)
+    with pytest.raises(ValueError, match="recognized"):
+        MinosSession.from_config({"zzz": 1}, references=micro_library)
+
+
+# ---------------------------------------------------------------------------
+# journal / snapshot unit behavior
+# ---------------------------------------------------------------------------
+def test_journal_roundtrip_and_torn_tail(tmp_path):
+    jp = str(tmp_path / "j" / JOURNAL_FILE)
+    journal = EventJournal(jp)
+    for i in range(5):
+        assert journal.append("tick", {"i": i}) == i + 1
+    journal.close()
+    records, good = EventJournal.recover(jp)
+    assert [r.data["i"] for r in records] == list(range(5))
+    assert good == os.path.getsize(jp)
+    with open(jp, "ab") as f:
+        f.write(b'{"seq": 6, "ts": 1.0, "ki')
+    with pytest.warns(RuntimeWarning, match="torn"):
+        journal2, records2 = EventJournal.open_existing(jp)
+    assert len(records2) == 5
+    assert os.path.getsize(jp) == good       # damaged tail physically gone
+    assert journal2.append("tick", {"i": 5}) == 6
+    journal2.close()
+    records3, _ = EventJournal.recover(jp)
+    assert len(records3) == 6                # extends the clean prefix
+
+
+def test_journal_checksum_and_sequence_breaks(tmp_path):
+    jp = str(tmp_path / JOURNAL_FILE)
+    journal = EventJournal(jp)
+    for i in range(4):
+        journal.append("tick", {"i": i})
+    journal.close()
+    with open(jp, "rb") as f:
+        lines = f.read().splitlines(keepends=True)
+    # checksum flip in record 3 -> prefix of 2 survives
+    bad = lines[:2] + [lines[2].replace(b'"i":2', b'"i":9', 1)] + lines[3:]
+    with open(jp, "wb") as f:
+        f.writelines(bad)
+    with pytest.warns(RuntimeWarning, match="checksum"):
+        records, _ = EventJournal.recover(jp)
+    assert len(records) == 2
+    # sequence gap -> same prefix rule
+    with open(jp, "wb") as f:
+        f.writelines([lines[0], lines[2]])
+    with pytest.warns(RuntimeWarning, match="sequence"):
+        records, _ = EventJournal.recover(jp)
+    assert len(records) == 1
+
+
+def test_snapshot_retention_and_fallback(tmp_path):
+    store = SnapshotStore(str(tmp_path), retain=2)
+    for seq in (3, 7, 11):
+        store.write({"v": seq}, seq)
+    files = sorted(glob.glob(str(tmp_path / "snapshot-*.json")))
+    assert len(files) == 2                   # N-1 retention pruned seq 3
+    state, seq = store.load_latest()
+    assert (state, seq) == ({"v": 11}, 11)
+    with open(files[-1], "r+b") as f:        # corrupt the newest
+        f.seek(10)
+        f.write(b"~~~~")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        state, seq = store.load_latest()
+    assert (state, seq) == ({"v": 7}, 7)     # fell back one snapshot
+    assert store.load_latest(max_seq=5) == (None, 0)   # future snaps skipped
+
+
+def test_session_store_snapshot_cadence(tmp_path):
+    store = SessionStore.create(str(tmp_path / "s"), snapshot_every=3)
+    store.capture = lambda: {"n": store.journal.last_seq}
+    for i in range(7):
+        store.record("tick", i=i)
+        store.flush_snapshot()
+    assert store.load_snapshot() == ({"n": 6}, 6)      # wrote at 3 and 6
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: poisoned telemetry cannot corrupt a later snapshot
+# ---------------------------------------------------------------------------
+def _poison(chunk, kind, rng_val):
+    e = np.asarray(chunk.energy_j, np.float64).copy()
+    b = np.asarray(chunk.busy_s, np.float64).copy()
+    i = int(rng_val * (len(e) - 1))
+    dt = chunk.sample_dt
+    if kind == "nan-energy":
+        e[i] = np.nan
+    elif kind == "neg-energy":
+        e[i] = -abs(e[i]) - 1.0
+    elif kind == "backwards-energy":
+        e[i] = e[i] * 0.25 - 1.0
+        e[:i] = np.maximum.accumulate(e[:i]) + 2.0 + e[i]
+    elif kind == "nan-busy":
+        b[i] = np.nan
+    elif kind == "backwards-busy":
+        b[-1] = -1.0
+    elif kind == "bad-dt":
+        dt = 0.0
+    return TelemetryChunk(energy_j=e, busy_s=b, sample_dt=dt,
+                          start_index=chunk.start_index)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(["nan-energy", "neg-energy", "backwards-energy",
+                        "nan-busy", "backwards-busy", "bad-dt"]),
+       st.floats(min_value=0.0, max_value=1.0),
+       st.integers(min_value=0, max_value=5))
+def test_poisoned_chunk_never_corrupts_snapshot(kind, where, after):
+    """Property: offer a poisoned chunk at an arbitrary stream position —
+    ingest raises ValueError with job/device context and the builder's
+    later snapshots are byte-identical to never having seen the poison."""
+    meta, chunks = stream_telemetry(micro_gemm(), 1.0, MODEL, seed=42,
+                                    target_duration=0.3,
+                                    device_id="tpu-v5e/000")
+    chunks = list(chunks)
+    after = min(after, len(chunks) - 1)
+    clean = ProfileBuilder(meta, tdp=TDP)
+    poisoned = ProfileBuilder(meta, tdp=TDP)
+    for chunk in chunks[:after]:
+        clean.ingest(chunk)
+        poisoned.ingest(chunk)
+    with pytest.raises(ValueError) as err:
+        poisoned.ingest(_poison(chunks[after], kind, where))
+    assert meta.name in str(err.value)
+    assert "tpu-v5e/000" in str(err.value)
+    for chunk in chunks[after:]:             # the intact stream continues
+        clean.ingest(chunk)
+        poisoned.ingest(chunk)
+    a, b = clean.finalize(), poisoned.finalize()
+    assert np.array_equal(a.power_trace, b.power_trace)
+    for c in (0.1, 0.25):
+        assert np.array_equal(a.spike_vec(c), b.spike_vec(c))
+
+
+# ---------------------------------------------------------------------------
+# satellite: corrupt spike cache degrades to a cold rebuild
+# ---------------------------------------------------------------------------
+def test_library_load_survives_corrupt_spike_cache(micro_library, tmp_path):
+    directory = str(tmp_path / "lib")
+    micro_library.save(directory)
+    intact = ReferenceLibrary.load(directory)        # byte-identity pin path
+    for c in intact.bin_sizes:
+        assert np.array_equal(intact.spike_matrix(c),
+                              micro_library.spike_matrix(c))
+    with open(os.path.join(directory, "spike_cache.npz"), "r+b") as f:
+        f.truncate(100)                              # truncated mid-write
+    with pytest.warns(RuntimeWarning, match="cold spike-matrix rebuild"):
+        cold = ReferenceLibrary.load(directory)
+    for c in cold.bin_sizes:
+        assert np.array_equal(cold.spike_matrix(c),
+                              micro_library.spike_matrix(c))
+    # corrupt library.json: same degradation, still loads
+    with open(os.path.join(directory, "library.json"), "w") as f:
+        f.write("{not json")
+    with pytest.warns(RuntimeWarning, match="cold spike-matrix rebuild"):
+        cold2 = ReferenceLibrary.load(directory)
+    assert [p.name for p in cold2] == [p.name for p in micro_library]
+
+
+# ---------------------------------------------------------------------------
+# journal-derived windowed reports
+# ---------------------------------------------------------------------------
+def test_windowed_report_from_scripted_run(scripted_store):
+    path, _ = scripted_store
+    windows = store_report(path, window_s=3600.0)
+    assert windows, "journal should produce at least one window"
+    totals = {k: sum(w[k] for w in windows)
+              for k in ("admits", "decisions", "retires", "migrations",
+                        "failures", "degrades", "restores")}
+    assert totals["admits"] == 3
+    assert totals["decisions"] == 3
+    assert totals["retires"] == 1
+    assert totals["failures"] == 1
+    assert totals["degrades"] == 1
+    assert totals["restores"] == 1
+    assert totals["migrations"] >= 1         # the fail drained job A
+    last = windows[-1]
+    assert last["budget_w"] == 5000.0
+    assert last["headroom_w"] == pytest.approx(5000.0 - last["planned_w"])
+    assert 0.0 <= last["utilization"] <= 1.0
+
+
+def test_windowed_report_handles_unbounded_budget():
+    recs = [
+        {"seq": 1, "ts": 0.0, "kind": "open",
+         "data": {"budget_w": {"__float__": "inf"}}},
+        {"seq": 2, "ts": 1.0, "kind": "admit", "data": {"job_id": "a"}},
+        {"seq": 3, "ts": 2.0, "kind": "decision",
+         "data": {"job_id": "a", "plan": {"job_id": "a",
+                                          "predicted_p90_w": 123.0}}},
+        {"seq": 4, "ts": 7200.0, "kind": "retire", "data": {"job_id": "a"}},
+    ]
+    windows = windowed_report(recs, window_s=3600.0)
+    assert len(windows) == 3                 # gap windows are emitted too
+    assert windows[0]["planned_w"] == 123.0
+    assert windows[0]["utilization"] is None
+    assert windows[0]["headroom_w"] == math.inf
+    assert windows[1]["records"] == 0
+    assert windows[2]["retires"] == 1 and windows[2]["planned_w"] == 0.0
+    with pytest.raises(ValueError, match="positive"):
+        windowed_report(recs, window_s=0.0)
+    assert windowed_report([], window_s=60.0) == []
+
+
+def test_meta_roundtrip_preserves_traces():
+    """Admit-record codec: a TraceMeta rebuilt from its journal record is
+    equal to the original (kernel rows back to tuples, floats exact)."""
+    from repro.fleet.records import meta_from_record, meta_record
+    meta, _ = _telemetry(micro_gemm(), 3)
+    rebuilt = meta_from_record(json.loads(json.dumps(meta_record(meta))))
+    assert rebuilt == meta
+    assert isinstance(rebuilt, TraceMeta)
