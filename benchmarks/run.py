@@ -12,8 +12,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_baseline_cmp, bench_binsize, bench_case_study,
                             bench_cdf, bench_chaos, bench_classification,
-                            bench_fleet, bench_freq_scaling, bench_holdout,
-                            bench_kernels, bench_online_cap,
+                            bench_fleet, bench_fleet_scale, bench_freq_scaling,
+                            bench_holdout, bench_kernels, bench_online_cap,
                             bench_profiling_throughput, bench_recovery,
                             bench_roofline, bench_savings)
 
@@ -23,7 +23,7 @@ def main() -> None:
                 bench_case_study, bench_holdout, bench_baseline_cmp,
                 bench_binsize, bench_savings, bench_kernels, bench_roofline,
                 bench_profiling_throughput, bench_online_cap, bench_fleet,
-                bench_chaos, bench_recovery):
+                bench_fleet_scale, bench_chaos, bench_recovery):
         try:
             mod.run()
         except Exception:

@@ -48,6 +48,7 @@ from repro.fleet.inventory import (DeviceInstance, DeviceInventory,
 from repro.fleet.mux import FleetChunk, FleetTelemetryMux
 from repro.ft.fleetwatch import FleetStragglerAdapter
 from repro.ft.heartbeat import StragglerMonitor
+from repro.pipeline.batch import BatchProfileEngine, SlotBuilder
 from repro.pipeline.builder import (PartialProfile, ProfileBuilder,
                                     stream_profile_once,
                                     stream_profile_workload)
@@ -84,6 +85,7 @@ __all__ = [
     "ProfileBuilder", "PartialProfile", "ReferenceLibrary",
     "build_reference_library", "OnlineCapController",
     "stream_profile_once", "stream_profile_workload",
+    "BatchProfileEngine", "SlotBuilder",
     # classification core
     "MinosClassifier", "WorkloadProfile", "FreqPoint",
     "select_optimal_freq", "profiling_savings", "count_classifier_calls",

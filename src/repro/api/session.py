@@ -42,7 +42,7 @@ from repro.fleet.records import device_from_record, device_record, \
     mesh_from_record, mesh_record, meta_from_record, meta_record
 from repro.ft.fleetwatch import FleetStragglerAdapter
 from repro.ft.heartbeat import StragglerMonitor
-from repro.pipeline.builder import PartialProfile, ProfileBuilder
+from repro.pipeline.builder import PartialProfile
 from repro.pipeline.online import CapDecision
 from repro.sched.dvfs import FrequencyActuator
 from repro.sched.power_sched import JobPlan
@@ -443,8 +443,7 @@ class MinosSession:
             if job.decision is None:
                 # the in-flight partial trace died with the process:
                 # demand a fresh profiling run (PR 5 migration semantics)
-                job.builder = ProfileBuilder(
-                    job.builder.meta, tdp=job.device.effective_tdp_w)
+                session._fleet._replace_builder(job)
                 job.needs_reprofile = True
             elif job.actuator is not None and job.plan is not None:
                 job.actuator.set_cap(job.decision.cap)
@@ -805,8 +804,8 @@ class MinosSession:
             mux = FleetTelemetryMux()
             for h in pending:
                 mux.add_job(h.job_id, h.meta, h._take_chunks())
-            for fchunk in mux:
-                self._fleet.ingest(fchunk)
+            for batch in mux.ticks():
+                self._fleet.ingest_tick(batch)
         if finalize and self._fleet.jobs:
             self._fleet.finalize()
         return self.report()

@@ -57,7 +57,16 @@ class WorkloadProfile:
         return spikes.spike_vector(self.power_trace, self.tdp, bin_size)
 
     def p_quantile(self, q: float) -> float:
-        return spikes.p_quantile(self.power_trace, self.tdp, q)
+        # the trace is immutable after construction and the online path asks
+        # every reference for the same quantile on every classify (the
+        # choose_bin_size sweep) — memoize per q, like PartialProfile's
+        # spike-vector memo.  First call computes, later calls return the
+        # identical float, so decisions are unchanged bit-for-bit.
+        cache = self.__dict__.setdefault("_pq_memo", {})
+        q = float(q)
+        if q not in cache:
+            cache[q] = spikes.p_quantile(self.power_trace, self.tdp, q)
+        return cache[q]
 
     @property
     def mean_power(self) -> float:
@@ -175,17 +184,85 @@ class MinosClassifier:
         ``(best_ref, d_best, d_second)`` per target.  ``d_second`` is ``inf``
         when only one reference is eligible — the margin signal the online
         cap controller turns into a confidence score."""
+        idx, best, second = self._top2(targets, bin_size, exclude)
+        return [(self.references[i], float(d1), float(d2))
+                for i, d1, d2 in zip(idx, best, second)]
+
+    def power_neighbors_idx(self, targets: list[WorkloadProfile],
+                            bin_size: float | None = None,
+                            exclude: str | None = None
+                            ) -> tuple[np.ndarray, np.ndarray]:
+        """Allocation-light twin of ``power_neighbors`` for fleet-scale
+        batches: the nearest reference per target as parallel ``(index,
+        distance)`` arrays instead of ``(ref, float)`` tuples.  Row values
+        are bit-identical to ``power_neighbors``."""
         D = self._mask(self._power_distances(targets, bin_size), targets,
                        exclude)
-        idx = np.argmin(D, axis=1)
-        best = D[np.arange(len(targets)), idx]
-        self._check_eligible(best, targets, exclude)
+        return self._argbest(D, targets, exclude)
+
+    def power_top2_idx(self, targets: list[WorkloadProfile],
+                       bin_size: float | None = None,
+                       exclude: str | None = None
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Array-form ``power_top2``: ``(index, d_best, d_second)``."""
+        return self._top2(targets, bin_size, exclude)
+
+    def power_sweep(self, targets: list[WorkloadProfile], bin_sizes,
+                    exclude: str | None = None, second: bool = True
+                    ) -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Fused bin-size sweep for fleet batches: for every candidate bin
+        size, the nearest reference ``(index, d_best)`` plus the runner-up
+        ``d_second``, sharing one exclusion mask across candidates and one
+        distance matrix per candidate.  Each entry is bit-identical to a
+        ``power_top2_idx(targets, bin_size=c)`` call — the distances come
+        from the same ``_power_distances`` matrix, just not recomputed.
+
+        With ``second=False`` the third element is the *masked distance
+        matrix itself* instead of the runner-up column: callers that only
+        need ``d_second`` at one chosen bin size per row (the online margin
+        path) can partition just those rows — each row of the matrix is
+        untouched, so a sliced partition is bit-identical."""
+        names = np.array([t.name for t in targets])
+        masked = self._ref_names[None, :] == names[:, None]
+        if exclude is not None:
+            masked |= self._ref_names[None, :] == exclude
+        # targets minted by one BatchProfileEngine snapshot/finalize batch
+        # carry a shared memo matrix per bin size: gather their rows with one
+        # fancy index instead of a per-target Python stack (identical rows)
+        shared = None
+        mats = targets[0].__dict__.get("_spike_mat") if targets else None
+        if mats is not None:
+            refs = [t.__dict__.get("_spike_mat") for t in targets]
+            if all(r is not None and r[0] is mats[0] for r in refs):
+                shared = (mats[0],
+                          np.array([r[1] for r in refs], np.int64))
+        out = []
+        for c in bin_sizes:
+            c = float(c)
+            if shared is not None and c in shared[0]:
+                D = _cosine_distances(shared[0][c][shared[1]],
+                                      self.spike_matrix(c))
+            else:
+                D = self._power_distances(targets, c)
+            D = np.where(masked, np.inf, D)
+            idx, best = self._argbest(D, targets, exclude)
+            if not second:
+                out.append((idx, best, D))
+            elif D.shape[1] > 1:
+                out.append((idx, best, np.partition(D, 1, axis=1)[:, 1]))
+            else:
+                out.append((idx, best, np.full(len(targets), np.inf)))
+        return out
+
+    def _top2(self, targets, bin_size, exclude):
+        D = self._mask(self._power_distances(targets, bin_size), targets,
+                       exclude)
+        idx, best = self._argbest(D, targets, exclude)
         if D.shape[1] > 1:
             second = np.partition(D, 1, axis=1)[:, 1]
         else:
             second = np.full(len(targets), np.inf)
-        return [(self.references[i], float(d1), float(d2))
-                for i, d1, d2 in zip(idx, best, second)]
+        return idx, best, second
 
     def _power_distances(self, targets: list[WorkloadProfile],
                          bin_size: float | None) -> np.ndarray:
@@ -220,13 +297,25 @@ class MinosClassifier:
         """Nearest reference by Euclidean distance in utilization space, for
         a batch of targets (one (n_targets, n_refs) matrix op; exclusion
         semantics as in ``power_neighbors``)."""
+        return self._pick(self._util_distances(targets), targets, exclude)
+
+    def util_neighbors_idx(self, targets: list[WorkloadProfile],
+                           exclude: str | None = None
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Array-form ``util_neighbors``: ``(index, distance)`` arrays."""
+        D = self._mask(self._util_distances(targets), targets, exclude)
+        return self._argbest(D, targets, exclude)
+
+    def _util_distances(self, targets: list[WorkloadProfile]) -> np.ndarray:
         if self._is_reference_batch(targets):
             T = self.util_matrix()
         else:
-            T = np.stack([t.util_point for t in targets])
+            # same values as stacking each target's util_point, without the
+            # per-target array construction
+            T = np.array([(t.dram_util, t.sm_util) for t in targets],
+                         np.float64).reshape(-1, 2)
         diff = T[:, None, :] - self.util_matrix()[None, :, :]
-        D = np.sqrt(np.sum(diff * diff, axis=-1))
-        return self._pick(D, targets, exclude)
+        return np.sqrt(np.sum(diff * diff, axis=-1))
 
     def util_neighbor(self, target: WorkloadProfile,
                       exclude: str | None = None) -> tuple[WorkloadProfile, float]:
@@ -242,8 +331,11 @@ class MinosClassifier:
 
     def _mask(self, D: np.ndarray, targets: list[WorkloadProfile],
               exclude: str | None) -> np.ndarray:
+        # fixed-width string dtype (not object) keeps the comparison a C
+        # broadcast — same booleans, no per-cell Python equality at fleet
+        # batch sizes
         masked = self._ref_names[None, :] == \
-            np.array([t.name for t in targets], dtype=object)[:, None]
+            np.array([t.name for t in targets])[:, None]
         if exclude is not None:
             masked |= self._ref_names[None, :] == exclude
         return np.where(masked, np.inf, D)
@@ -257,23 +349,35 @@ class MinosClassifier:
                 f"no eligible reference for target {bad!r}: every reference "
                 f"is excluded (self-match or exclude={exclude!r})")
 
-    def _pick(self, D: np.ndarray, targets: list[WorkloadProfile],
-              exclude: str | None) -> list[tuple[WorkloadProfile, float]]:
-        D = self._mask(D, targets, exclude)
+    def _argbest(self, D: np.ndarray, targets: list[WorkloadProfile],
+                 exclude: str | None) -> tuple[np.ndarray, np.ndarray]:
         idx = np.argmin(D, axis=1)
         best = D[np.arange(len(targets)), idx]
         self._check_eligible(best, targets, exclude)
+        return idx, best
+
+    def _pick(self, D: np.ndarray, targets: list[WorkloadProfile],
+              exclude: str | None) -> list[tuple[WorkloadProfile, float]]:
+        idx, best = self._argbest(self._mask(D, targets, exclude), targets,
+                                  exclude)
         return [(self.references[i], float(d)) for i, d in zip(idx, best)]
 
 
 def _cosine_distances(A: np.ndarray, B: np.ndarray) -> np.ndarray:
     """Pairwise cosine distances between the rows of A and of B; rows with
-    zero norm are at distance 1 from everything (the seed convention)."""
+    zero norm are at distance 1 from everything (the seed convention).
+
+    The dot products go through ``np.einsum`` rather than ``@``: einsum's
+    per-row summation order does not depend on how many rows A has, so row i
+    of a batched call is bit-identical to a one-row call — the property the
+    fleet's batched classification relies on to stay byte-identical to the
+    per-job path (BLAS matmul kernels do NOT guarantee this across shapes).
+    """
     na = np.linalg.norm(A, axis=1)
     nb = np.linalg.norm(B, axis=1)
     Ua = A / np.where(na > 0, na, 1.0)[:, None]
     Ub = B / np.where(nb > 0, nb, 1.0)[:, None]
-    D = 1.0 - np.clip(Ua @ Ub.T, -1.0, 1.0)
+    D = 1.0 - np.clip(np.einsum("ik,jk->ij", Ua, Ub), -1.0, 1.0)
     D[na == 0, :] = 1.0
     D[:, nb == 0] = 1.0
     return D
@@ -288,7 +392,9 @@ def count_classifier_calls(clf: "MinosClassifier") -> dict:
     count unchanged (``tests/test_api.py``, ``tests/test_chaos.py``,
     ``benchmarks/bench_chaos.py``)."""
     calls = {"n": 0}
-    for name in ("power_neighbors", "util_neighbors", "power_top2"):
+    for name in ("power_neighbors", "util_neighbors", "power_top2",
+                 "power_neighbors_idx", "util_neighbors_idx",
+                 "power_top2_idx", "power_sweep"):
         orig = getattr(clf, name)
 
         def wrapped(*a, _orig=orig, **k):

@@ -40,6 +40,7 @@ injection.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 
 from repro.configs.base import MeshConfig
@@ -50,9 +51,11 @@ from repro.fleet.mux import FleetChunk, FleetTelemetryMux
 from repro.fleet.records import device_record, meta_record, mesh_record
 from repro.ft.elastic import plan_new_mesh, rescale_batch
 from repro.ft.fleetwatch import FleetStragglerAdapter
+from repro.pipeline.batch import BatchProfileEngine
 from repro.pipeline.builder import ProfileBuilder
 from repro.pipeline.library import ReferenceLibrary
-from repro.pipeline.online import CapDecision, OnlineCapController
+from repro.pipeline.online import CapDecision, OnlineCapController, \
+    finalize_fleet, observe_fleet
 from repro.sched.dvfs import SimActuator
 from repro.sched.power_sched import JobPlan, PowerAwareScheduler, \
     ScheduleResult
@@ -76,7 +79,7 @@ class FleetJob:
     job_id: str
     device: DeviceInstance         # primary device (profiling frame)
     chips: int
-    builder: ProfileBuilder
+    builder: object                # ProfileBuilder | pipeline.batch.SlotBuilder
     controller: OnlineCapController
     actuator: object               # FrequencyActuator | None (plugin-chosen)
     decision: CapDecision | None = None
@@ -131,7 +134,17 @@ class FleetCapController:
                  actuator_factory=SimActuator.for_device,
                  inventory: DeviceInventory | None = None,
                  straggler_adapter: FleetStragglerAdapter | None = None,
-                 journal=None):
+                 journal=None, engine: str = "batched",
+                 repack: str = "decision"):
+        """``engine`` selects the builder state layout: ``"batched"``
+        (default) backs every job by one slot of a shared columnar
+        ``BatchProfileEngine`` — bit-identical to ``"perjob"`` (one
+        ``ProfileBuilder`` per job, the reference path), but advanced in one
+        stacked pass per ``ingest_tick``.  ``repack`` sets the re-packing
+        cadence: ``"decision"`` (default) re-packs on every landed decision
+        exactly like the per-chunk path; ``"tick"`` coalesces to one re-pack
+        per mux tick — same final packing, O(ticks) instead of O(decisions)
+        scheduler calls, the fleet-scale mode."""
         if isinstance(references, ReferenceLibrary):
             self.clf = references.classifier()
         elif isinstance(references, MinosClassifier):
@@ -151,6 +164,14 @@ class FleetCapController:
         self.scheduler = PowerAwareScheduler(
             self.clf, tdp_w=0.0, objective=objective,
             quantile=provision_quantile)
+        if engine not in ("batched", "perjob"):
+            raise ValueError(f"engine must be 'batched' or 'perjob', "
+                             f"got {engine!r}")
+        if repack not in ("decision", "tick"):
+            raise ValueError(f"repack must be 'decision' or 'tick', "
+                             f"got {repack!r}")
+        self.engine = BatchProfileEngine() if engine == "batched" else None
+        self.repack_mode = repack
         self.inventory = inventory
         self.straggler_adapter = straggler_adapter
         # write-ahead session store (repro.store.SessionStore), attached by
@@ -186,6 +207,32 @@ class FleetCapController:
         mid-mutation would lose the in-flight record on replay)."""
         if self.journal is not None:
             self.journal.flush_snapshot()
+
+    # -- builder lifecycle -----------------------------------------------
+    def _make_builder(self, meta, tdp: float):
+        """One profiling-state handle in the configured engine: a slot view
+        of the shared columnar engine, or a standalone ``ProfileBuilder``."""
+        if self.engine is not None:
+            return self.engine.builder(meta, tdp)
+        return ProfileBuilder(meta, tdp=tdp)
+
+    @staticmethod
+    def _drop_builder(builder) -> None:
+        """Release a builder's engine slot for reuse (no-op for the
+        standalone ``ProfileBuilder``)."""
+        release = getattr(builder, "release", None)
+        if release is not None:
+            release()
+
+    def _replace_builder(self, job: FleetJob, meta=None,
+                         tdp: float | None = None):
+        """Swap a job's profiling state for a fresh run (migration /
+        reprofile), freeing the old engine slot."""
+        meta = meta if meta is not None else job.builder.meta
+        tdp = job.device.effective_tdp_w if tdp is None else tdp
+        self._drop_builder(job.builder)
+        job.builder = self._make_builder(meta, tdp)
+        return job.builder
 
     # -- admission -------------------------------------------------------
     def admit(self, device: DeviceInstance, meta, chips: int = 1,
@@ -224,12 +271,15 @@ class FleetCapController:
                         and not self.inventory.is_healthy(did):
                     raise ValueError(f"cannot admit on {did!r}: device is "
                                      f"{self.inventory.health(did)}")
-        self._journal(
-            "admit", job_id=job_id, device=device_record(device),
-            chips=int(chips), meta=meta_record(meta),
-            profile_to_completion=bool(profile_to_completion),
-            devices=[device_record(d) for d in span],
-            mesh=mesh_record(mesh), global_batch=global_batch)
+        if self.journal is not None:
+            # the record payload (dataclasses.asdict over meta/devices) is
+            # the expensive part — only build it when a store is attached
+            self._journal(
+                "admit", job_id=job_id, device=device_record(device),
+                chips=int(chips), meta=meta_record(meta),
+                profile_to_completion=bool(profile_to_completion),
+                devices=[device_record(d) for d in span],
+                mesh=mesh_record(mesh), global_batch=global_batch)
         actuator = self.actuator_factory(device) \
             if self.actuator_factory is not None else None
         controller = OnlineCapController(
@@ -237,7 +287,7 @@ class FleetCapController:
             device_id=device.device_id, **self._gates)
         self.jobs[job_id] = FleetJob(
             job_id=job_id, device=device, chips=int(chips),
-            builder=ProfileBuilder(meta, tdp=device.effective_tdp_w),
+            builder=self._make_builder(meta, device.effective_tdp_w),
             controller=controller, actuator=actuator,
             profile_to_completion=profile_to_completion,
             devices=span, mesh=mesh, global_batch=global_batch)
@@ -268,7 +318,8 @@ class FleetCapController:
             return None
         return self.ingest_chunk(fchunk.job_id, fchunk.chunk)
 
-    def ingest_chunk(self, job_id: str, chunk) -> CapDecision | None:
+    def ingest_chunk(self, job_id: str, chunk,
+                     _defer_repack: bool = False) -> CapDecision | None:
         """Un-muxed entry point: ingest one raw ``TelemetryChunk`` for
         ``job_id`` (the ``MinosSession``/``JobHandle`` feed path)."""
         job = self.jobs[job_id]
@@ -290,9 +341,94 @@ class FleetCapController:
         if decision is None:
             return None
         self._decide(job, decision)
-        self._repack()
-        self._sync_store()
+        if not _defer_repack:
+            self._repack()
+            self._sync_store()
         return decision
+
+    def ingest_tick(self, batch) -> list[CapDecision]:
+        """Advance the fleet by one mux tick — a batch of simultaneous
+        ``FleetChunk``s from ``FleetTelemetryMux.ticks()`` — in one columnar
+        engine pass instead of a per-job Python loop.  Returns the decisions
+        that landed this tick, in chunk order.
+
+        Outcome-equivalent to calling ``ingest`` per chunk in batch order:
+        undecided jobs' chunks advance through ``BatchProfileEngine.
+        ingest_batch`` (bit-identical builder state), then confidence gates
+        are observed in the same chunk order, so decisions, journal records,
+        and (with ``repack="decision"``) re-packs land in the identical
+        sequence.  With ``repack="tick"`` all of a tick's decisions share
+        one closing re-pack.  Falls back to the sequential path per chunk
+        when the chunk can't batch (per-job engine, duplicate job in one
+        batch, straggler cadence monitoring — which is order-sensitive)."""
+        if self.straggler_adapter is not None:
+            # cadence monitoring consumes chunks one at a time in wire
+            # order; keep that path byte-identical
+            return [d for d in (self.ingest(fc) for fc in batch)
+                    if d is not None]
+        defer = self.repack_mode == "tick"
+        store_ctx = self.journal.batch() if self.journal is not None \
+            else nullcontext()
+        decisions: list[CapDecision] = []
+        with store_ctx:
+            # route: engine-eligible chunks batch; the rest go sequential
+            rows = []               # (fchunk, job | None, batched, observe)
+            seen: set[str] = set()
+            slots, chunks = [], []
+            jobs_get = self.jobs.get          # hoisted: this loop runs once
+            failed = self._failed_devices     # per chunk at fleet scale
+            eng = self.engine
+            for fc in batch:
+                if fc.device_id in failed:
+                    self._dropped += 1
+                    continue
+                job = jobs_get(fc.job_id)
+                if job is None:            # retired/stranded mid-stream
+                    self._dropped += 1
+                    continue
+                eligible = (eng is not None
+                            and fc.job_id not in seen
+                            and getattr(job.builder, "engine", None) is eng
+                            and not job.needs_reprofile
+                            and (job.decision is None
+                                 or job.profile_to_completion))
+                seen.add(fc.job_id)
+                if eligible:
+                    slots.append(job.builder.slot)
+                    chunks.append(fc.chunk)
+                    rows.append((fc, job, True, job.decision is None))
+                else:
+                    rows.append((fc, job, False, False))
+            if slots:
+                self.engine.ingest_batch(slots, chunks)
+            # one classification sweep for every gate-passing undecided job
+            # this tick (engine rows only mutate through ingest_batch above,
+            # so the batched observations see exactly the state the per-row
+            # observe calls would)
+            obs = [pos for pos, (_, job, batched, observe) in enumerate(rows)
+                   if batched and observe]
+            tick_ds = dict(zip(obs, observe_fleet(
+                [(rows[pos][1].controller, rows[pos][1].builder)
+                 for pos in obs]))) if obs else {}
+            for pos, (fc, job, batched, observe) in enumerate(rows):
+                if not batched:
+                    d = self.ingest_chunk(fc.job_id, fc.chunk,
+                                          _defer_repack=defer)
+                elif observe:
+                    d = tick_ds.get(pos)
+                    if d is not None:
+                        self._decide(job, d)
+                        if not defer:
+                            self._repack()
+                            self._sync_store()
+                else:
+                    d = None       # decided profile-to-completion job
+                if d is not None:
+                    decisions.append(d)
+            if defer and decisions:
+                self._repack()
+                self._sync_store()
+        return decisions
 
     def finalize(self) -> FleetResult:
         """Decide any still-undecided jobs from their completed profiles,
@@ -302,8 +438,20 @@ class FleetCapController:
         decision map rather than classified from an empty trace."""
         pending = [j for j in self.jobs.values()
                    if j.decision is None and j.builder.n_ingested > 0]
+        batched = [j for j in pending
+                   if self.engine is not None
+                   and getattr(j.builder, "engine", None) is self.engine]
+        # engine-backed stragglers classify in one batched sweep; decisions
+        # still adopt in admission order so journal replay stays verbatim
+        pre = dict(zip(
+            (j.job_id for j in batched),
+            finalize_fleet([(j.controller, j.builder) for j in batched]))) \
+            if batched else {}
         for job in pending:
-            self._decide(job, job.controller.finalize(job.builder))
+            decision = pre.get(job.job_id)
+            if decision is None:
+                decision = job.controller.finalize(job.builder)
+            self._decide(job, decision)
         if pending or not self.repacks:
             self._repack()
         self._sync_store()
@@ -337,15 +485,17 @@ class FleetCapController:
                              f"re-profile")
         meta = meta if meta is not None else job.builder.meta
         self._journal("reprofile", job_id=job_id, meta=meta_record(meta))
-        job.builder = ProfileBuilder(meta, tdp=job.device.effective_tdp_w)
+        self._replace_builder(job, meta)
         job.needs_reprofile = False
         self._sync_store()
 
     def run(self, mux: FleetTelemetryMux) -> FleetResult:
-        """Pump the multiplexed feed to completion: every chunk is routed,
-        each early cap re-packs the fleet, stragglers decide at stream end."""
-        for fchunk in mux:
-            self.ingest(fchunk)
+        """Pump the multiplexed feed to completion: every mux tick advances
+        all simultaneous jobs in one columnar pass, each early cap re-packs
+        the fleet (per the ``repack`` cadence), stragglers decide at stream
+        end.  Outcomes are byte-identical to the per-chunk drain."""
+        for batch in mux.ticks():
+            self.ingest_tick(batch)
         return self.finalize()
 
     # -- dynamic lifecycle -----------------------------------------------
@@ -359,6 +509,7 @@ class FleetCapController:
             raise KeyError(job_id)
         self._journal("retire", job_id=job_id)
         job = self.jobs.pop(job_id)
+        self._drop_builder(job.builder)
         if job.plan is not None:
             self._repack()
         self._sync_store()
@@ -540,8 +691,7 @@ class FleetCapController:
             if job.decision is None:
                 # the partial trace died with the device: drop it so a
                 # later finalize cannot classify from the dead frame
-                job.builder = ProfileBuilder(job.builder.meta,
-                                             tdp=job.device.effective_tdp_w)
+                self._replace_builder(job)
                 job.needs_reprofile = True
             return FleetEvent(
                 "strand", from_device_id, job_id=job.job_id,
@@ -556,8 +706,7 @@ class FleetCapController:
         else:
             # mid-profile: the partial trace died with the device — restart
             # the profiling run in the new device's normalization frame
-            job.builder = ProfileBuilder(job.builder.meta,
-                                         tdp=target.effective_tdp_w)
+            self._replace_builder(job, tdp=target.effective_tdp_w)
             job.needs_reprofile = True
             detail = "reprofile"
         self._rebind(job, target)
@@ -592,8 +741,7 @@ class FleetCapController:
             if job.decision is None:
                 # the profiling frame was the lost primary: its partial
                 # trace is unfinishable — restart on the new primary
-                job.builder = ProfileBuilder(job.builder.meta,
-                                             tdp=job.device.effective_tdp_w)
+                self._replace_builder(job)
                 job.needs_reprofile = True
         if job.decision is not None:
             job.plan = self.scheduler.migrate_plan(

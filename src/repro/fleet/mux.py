@@ -17,14 +17,17 @@ the property the homogeneous-fleet byte-identity test pins.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
+from typing import NamedTuple
 
 from repro.telemetry.simulator import TelemetryChunk, TraceMeta
 
 
-@dataclass(frozen=True)
-class FleetChunk:
-    """One multiplexed poll: a raw counter chunk tagged with its origin."""
+class FleetChunk(NamedTuple):
+    """One multiplexed poll: a raw counter chunk tagged with its origin.
+
+    A ``NamedTuple`` rather than a frozen dataclass: the mux mints one per
+    chunk per tick, and tuple construction is several times cheaper than
+    ``object.__setattr__``-based frozen-dataclass init at fleet scale."""
     job_id: str
     device_id: str
     t_end: float                 # wall-clock time of the last sample edge (s)
@@ -86,10 +89,9 @@ class FleetTelemetryMux:
             iters[order] = (job_id, did, t_start, it)
             chunk = next(it, None)
             if chunk is not None:
-                heapq.heappush(heap, (self._chunk_t_end(chunk, t_start),
-                                      order, FleetChunk(job_id, did,
-                                      self._chunk_t_end(chunk, t_start),
-                                      chunk)))
+                t_end = self._chunk_t_end(chunk, t_start)
+                heapq.heappush(heap, (t_end, order, FleetChunk._make(
+                    (job_id, did, t_end, chunk))))
         while heap:
             _, order, fchunk = heapq.heappop(heap)
             if self._is_dead(fchunk):
@@ -101,5 +103,46 @@ class FleetTelemetryMux:
             nxt = next(it, None)
             if nxt is not None:
                 t_end = self._chunk_t_end(nxt, t_start)
-                heapq.heappush(heap, (t_end, order,
-                                      FleetChunk(job_id, did, t_end, nxt)))
+                heapq.heappush(heap, (t_end, order, FleetChunk._make(
+                    (job_id, did, t_end, nxt))))
+
+    def ticks(self):
+        """Yield *batches* of ``FleetChunk``s — all chunks sharing one
+        ``t_end`` (one poll of the fleet wire) popped together, ordered by
+        the same ``(t_end, admission-order)`` key as ``__iter__``.
+
+        Concatenating the yielded batches reproduces ``__iter__``'s chunk
+        sequence exactly; the batching only exposes which chunks are
+        simultaneous so ``FleetCapController.ingest_tick`` can advance every
+        live job in one columnar pass.  Streams are pulled lazily per tick
+        (no per-chunk heap churn between equal timestamps), and
+        ``drop_job``/``drop_device`` take effect at the same poll boundary
+        as the per-chunk path.
+        """
+        heap: list[tuple[float, int, FleetChunk]] = []
+        iters: dict[int, tuple[str, str, float, object]] = {}
+        for order, (job_id, did, t_start, it) in enumerate(self._jobs):
+            iters[order] = (job_id, did, t_start, it)
+            chunk = next(it, None)
+            if chunk is not None:
+                t_end = self._chunk_t_end(chunk, t_start)
+                heapq.heappush(heap, (t_end, order, FleetChunk._make(
+                    (job_id, did, t_end, chunk))))
+        while heap:
+            t_now = heap[0][0]
+            popped: list[tuple[int, FleetChunk]] = []
+            while heap and heap[0][0] == t_now:
+                _, order, fchunk = heapq.heappop(heap)
+                popped.append((order, fchunk))
+            batch = [fc for _, fc in popped if not self._is_dead(fc)]
+            if batch:
+                yield batch
+            for order, fchunk in popped:
+                job_id, did, t_start, it = iters[order]
+                if job_id in self._dead_jobs or did in self._dead_devices:
+                    continue       # dropped at (or before) this poll
+                nxt = next(it, None)
+                if nxt is not None:
+                    t_end = self._chunk_t_end(nxt, t_start)
+                    heapq.heappush(heap, (t_end, order, FleetChunk._make(
+                        (job_id, did, t_end, nxt))))

@@ -70,3 +70,62 @@ def spike_hist_pallas(rel_power: jax.Array, n_bins: int, lo: float = 0.5,
         interpret=interpret,
     )(r)
     return out[0, :n_bins]
+
+
+def _batch_hist_kernel(r_ref, o_ref, *, n_bins: int, lo: float,
+                       bin_width: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    r = r_ref[...].astype(jnp.float32)            # (block_jobs, 128)
+    idx = jnp.floor((r - lo) / bin_width).astype(jnp.int32)
+    idx = jnp.where(r >= lo, jnp.minimum(idx, n_bins - 1), -1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 1, _OUT_COLS), 2)
+    # one-hot over the lane-held bin ids, reduced across this sample tile
+    counts = jnp.sum((idx[:, :, None] == bins).astype(jnp.float32), axis=1)
+    o_ref[...] += counts                           # (block_jobs, _OUT_COLS)
+
+
+def spike_hist_batch_pallas(rel_power: jax.Array, n_bins: int,
+                            lo: float = 0.5, hi: float = 2.0,
+                            bin_width: float | None = None,
+                            block_jobs: int = 8,
+                            interpret: bool | None = None) -> jax.Array:
+    """Batched fleet variant: (jobs, samples) f32 -> (jobs, n_bins) counts.
+
+    One kernel launch bins every live job's newly committed samples at once —
+    the TPU half of ``pipeline.batch.BatchProfileEngine``'s histogram
+    scatter.  Rows are jobs; sample padding uses -inf (never counted), so
+    ragged per-job sample counts are handled by masking before the call.
+    ``bin_width`` defaults to ``(hi - lo) / n_bins`` but callers that track
+    histograms keyed by an exact bin size should pass it explicitly —
+    ``(hi - lo) / n_bins`` re-derived in float can differ in the last ulp
+    from the originating bin size (e.g. 0.15).  ``interpret=None``
+    autodetects like ``spike_hist_pallas``.
+    """
+    assert n_bins <= _OUT_COLS
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if bin_width is None:
+        bin_width = (hi - lo) / n_bins
+    jobs, n = rel_power.shape
+    cols = 128
+    jb = -(-jobs // block_jobs) * block_jobs
+    sb = -(-n // cols) * cols
+    r = jnp.pad(rel_power.astype(jnp.float32),
+                ((0, jb - jobs), (0, sb - n)), constant_values=-jnp.inf)
+    grid = (jb // block_jobs, sb // cols)
+    kernel = functools.partial(_batch_hist_kernel, n_bins=n_bins, lo=lo,
+                               bin_width=bin_width)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_jobs, cols), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_jobs, _OUT_COLS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((jb, _OUT_COLS), jnp.float32),
+        interpret=interpret,
+    )(r)
+    return out[:jobs, :n_bins]

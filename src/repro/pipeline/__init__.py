@@ -11,10 +11,16 @@ Three layers, replacing the copy-pasted profile->classify->cap glue:
   * ``OnlineCapController`` (``online``) — classify partial profiles
     mid-run with a distance-margin confidence and actuate frequency caps
     early, re-packing the pod through ``PowerAwareScheduler``.
+  * ``BatchProfileEngine`` (``batch``) — slot-indexed columnar twin of
+    ``ProfileBuilder``: one stacked NumPy pass advances every live fleet
+    job per mux tick, bit-identical to the per-job path.
 """
+from repro.pipeline.batch import BatchProfileEngine, SlotBuilder
 from repro.pipeline.builder import (DEFAULT_BIN_SIZES, PartialProfile,
                                     ProfileBuilder, stream_profile_once,
                                     stream_profile_workload)
 from repro.pipeline.library import ReferenceLibrary, build_reference_library
 from repro.pipeline.online import (CapDecision, OnlineCapController,
-                                   classify_with_margin)
+                                   classify_with_margin,
+                                   classify_with_margin_batch,
+                                   finalize_fleet, observe_fleet)

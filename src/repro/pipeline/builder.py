@@ -56,6 +56,53 @@ class PartialProfile(WorkloadProfile):
         return cache[c]
 
 
+def _ema_filter_block(p: np.ndarray, state: float | None, alpha: float,
+                      w: float) -> np.ndarray:
+    """One fixed-position EMA block via prefix doubling; ``state`` is the
+    carried filter value from the previous block (``None`` = trace start).
+    Shared by ``_BlockedEMA`` and the columnar ``BatchProfileEngine`` so the
+    two paths evaluate the exact same float expressions."""
+    out = alpha * np.asarray(p, np.float64)
+    if state is None:
+        out[0] = p[0]                      # batch seeding: out_0 = p_0
+    else:
+        out[0] += w * state
+    shift, decay = 1, w
+    while shift < len(out) and decay != 0.0:
+        out[shift:] += decay * out[:-shift]
+        shift *= 2
+        decay *= decay
+    return out
+
+
+def _validate_readings(meta: TraceMeta, prev_e: float, prev_b: float,
+                       start_index: int, sample_dt: float,
+                       er: np.ndarray, br: np.ndarray) -> None:
+    """Reject poisoned telemetry (NaN/non-finite/regressing counters,
+    non-positive sample_dt) with the job/device context.  Shared by the
+    per-job ``ProfileBuilder`` and the batched engine so both raise the
+    byte-identical message for the same chunk."""
+    where = f"job {meta.name!r}"
+    if meta.device_id:
+        where += f" on device {meta.device_id!r}"
+    if not np.isfinite(sample_dt) or sample_dt <= 0:
+        raise ValueError(
+            f"{where}: chunk at sample {start_index} has "
+            f"non-positive/non-finite sample_dt {sample_dt!r} (sample "
+            f"timestamps must advance monotonically)")
+    for label, readings, prev in (("energy_j", er, prev_e),
+                                  ("busy_s", br, prev_b)):
+        if not np.all(np.isfinite(readings)):
+            raise ValueError(
+                f"{where}: chunk at sample {start_index} has "
+                f"NaN/non-finite {label} counter readings")
+        if readings[0] < prev or np.any(np.diff(readings) < 0):
+            raise ValueError(
+                f"{where}: {label} counter goes backwards in the chunk "
+                f"at sample {start_index} (cumulative counters "
+                f"must be non-negative and non-decreasing)")
+
+
 class _BlockedEMA:
     """EMA filter whose output does not depend on ingest chunk boundaries.
 
@@ -79,17 +126,7 @@ class _BlockedEMA:
         self._state: float | None = None   # None until the first sample
 
     def _filter_block(self, p: np.ndarray, state: float | None) -> np.ndarray:
-        out = self.alpha * np.asarray(p, np.float64)
-        if state is None:
-            out[0] = p[0]                  # batch seeding: out_0 = p_0
-        else:
-            out[0] += self.w * state
-        shift, decay = 1, self.w
-        while shift < len(out) and decay != 0.0:
-            out[shift:] += decay * out[:-shift]
-            shift *= 2
-            decay *= decay
-        return out
+        return _ema_filter_block(p, state, self.alpha, self.w)
 
     def ingest(self, p: np.ndarray) -> np.ndarray:
         """Absorb raw samples; return the newly *committed* filtered samples
@@ -221,26 +258,8 @@ class ProfileBuilder:
         counters and regressing readings raise here, with the job/device
         context, and the builder — hence every later snapshot and spike
         histogram — is left exactly as it was."""
-        where = f"job {self.meta.name!r}"
-        if self.meta.device_id:
-            where += f" on device {self.meta.device_id!r}"
-        dt = chunk.sample_dt
-        if not np.isfinite(dt) or dt <= 0:
-            raise ValueError(
-                f"{where}: chunk at sample {chunk.start_index} has "
-                f"non-positive/non-finite sample_dt {dt!r} (sample "
-                f"timestamps must advance monotonically)")
-        for label, readings, prev in (("energy_j", er, self._energy_j),
-                                      ("busy_s", br, self._busy_s)):
-            if not np.all(np.isfinite(readings)):
-                raise ValueError(
-                    f"{where}: chunk at sample {chunk.start_index} has "
-                    f"NaN/non-finite {label} counter readings")
-            if readings[0] < prev or np.any(np.diff(readings) < 0):
-                raise ValueError(
-                    f"{where}: {label} counter goes backwards in the chunk "
-                    f"at sample {chunk.start_index} (cumulative counters "
-                    f"must be non-negative and non-decreasing)")
+        _validate_readings(self.meta, self._energy_j, self._busy_s,
+                           chunk.start_index, chunk.sample_dt, er, br)
 
     def _take_busy(self, n: int) -> np.ndarray:
         buf = np.concatenate(self._busy_queue)

@@ -60,6 +60,13 @@ class JobPlan:
     nameplate_w: float = 0.0     # per-chip TDP a non-Minos scheduler reserves
     job_id: str = ""             # queue-entry tag ("" = keyed by name)
 
+    def __post_init__(self):
+        # pack()'s first-fit-decreasing sort key, precomputed because a
+        # fleet re-pack sorts the same (immutable) plans again and again;
+        # a plain attribute so ``attrgetter`` stays a C-level lookup
+        self._order_key = (-self.predicted_p90_w * self.chips, self.name,
+                           self.device_id, self.job_id)
+
 
 @dataclass
 class ScheduleResult:
@@ -98,6 +105,10 @@ class PowerAwareScheduler:
         self.objective_policy = resolve_objective(objective)
         self.objective = self.objective_policy.name
         self.quantile, self._rel = resolve_quantile(quantile)
+        # per-(neighbor, cap) relative-power memo: the lookup chain below is
+        # a pure function of the reference set, which is immutable
+        self._rel_memo: dict[tuple[str, float], float] = {}
+        self._ref_by_name: dict[str, WorkloadProfile] | None = None
 
     def plan_job(self, profile: WorkloadProfile, chips: int,
                  device=None) -> JobPlan:
@@ -110,11 +121,15 @@ class PowerAwareScheduler:
         the fleet controller's path: a job's online ``CapDecision`` carries
         the selection, so re-packing never re-classifies."""
         cap = self.objective_policy.cap(sel)
-        neighbor = next(r for r in self.clf.references
-                        if r.name == sel.power_neighbor)
-        # nearest available frequency in the neighbor's scaling data
-        f = min(neighbor.scaling, key=lambda x: abs(x - cap))
-        rel = self._rel(neighbor.scaling[f])
+        rel = self._rel_memo.get((sel.power_neighbor, cap))
+        if rel is None:
+            if self._ref_by_name is None:
+                self._ref_by_name = {r.name: r for r in self.clf.references}
+            neighbor = self._ref_by_name[sel.power_neighbor]
+            # nearest available frequency in the neighbor's scaling data
+            f = min(neighbor.scaling, key=lambda x: abs(x - cap))
+            rel = self._rel(neighbor.scaling[f])
+            self._rel_memo[(sel.power_neighbor, cap)] = rel
         if device is None:
             watts_base, nameplate, did = self.tdp_w, self.tdp_w, ""
         else:
@@ -142,9 +157,7 @@ class PowerAwareScheduler:
         deterministic tie-break: equal-power jobs pack in (name, device,
         job) order regardless of queue order (repacking the same queue must
         always produce the same placement)."""
-        plans = sorted(plans,
-                       key=lambda j: (-j.predicted_p90_w * j.chips, j.name,
-                                      j.device_id, j.job_id))
+        plans = sorted(plans, key=operator.attrgetter("_order_key"))
         res = ScheduleResult(budget_w=budget_w)
         used = 0.0
         for plan in plans:

@@ -21,6 +21,7 @@ up to ``journal.last_seq``.
 from __future__ import annotations
 
 import os
+from contextlib import contextmanager
 
 from .journal import JOURNAL_FILE, EventJournal, JournalRecord
 from .snapshots import SnapshotStore
@@ -123,6 +124,21 @@ class SessionStore:
         if self._since_snapshot >= self.snapshot_every:
             self._snapshot_due = True
         return seq
+
+    @contextmanager
+    def batch(self):
+        """Coalesce journal flushes across one fleet tick (see
+        ``EventJournal.batch``): records inside the block land in append
+        order but share one flush at exit.  ``fsync=True`` stores keep
+        per-record durability.  Snapshots written mid-batch are safe — a
+        crash that tears the unflushed journal tail truncates it on
+        recovery, and :meth:`load_snapshot` already skips snapshots past
+        the recovered tip."""
+        if self.journal is None:
+            yield self
+            return
+        with self.journal.batch():
+            yield self
 
     def flush_snapshot(self, capture=None, force: bool = False) -> bool:
         """Write a snapshot if one is due (or ``force``).  ``capture`` is a

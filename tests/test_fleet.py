@@ -242,3 +242,185 @@ def test_fleet_controller_gates_budget_and_early_stop(micro_library):
     for job in fleet.jobs.values():
         assert job.actuator.device_id == job.device.device_id
         assert job.actuator.get_cap() == result.decisions[job.job_id].cap
+
+
+# ---------------------------------------------------------------------------
+# batched engine: bit-for-bit identity with per-job ProfileBuilders
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.pipeline import BatchProfileEngine, ProfileBuilder  # noqa: E402
+from repro.telemetry.simulator import TelemetryChunk, TraceMeta  # noqa: E402
+
+
+def _synthetic_counters(seed, n, name="synthetic"):
+    rng = np.random.default_rng(seed)
+    power = rng.uniform(0.0, 1.3 * TDP, size=n)
+    busy = (rng.random(n) < 0.8).astype(float)
+    energy_ctr = np.concatenate([[0.0], np.cumsum(power * 1e-3)])
+    busy_ctr = np.concatenate([[0.0], np.cumsum(busy * 1e-3)])
+    meta = TraceMeta(name=name, domain="test", sample_dt=1e-3, n_samples=n,
+                     exec_time=1.0, app_sm_util=0.5, app_dram_util=0.5,
+                     kernel_rows=[])
+    return meta, energy_ctr, busy_ctr
+
+
+def _assert_builder_match(ref, sb):
+    assert ref.n_ingested == sb.n_ingested
+    assert ref.n_committed == sb.n_committed
+    assert ref.fraction == sb.fraction
+    assert ref.spike_count() == sb.spike_count()
+    for c in ref.bin_sizes:
+        np.testing.assert_array_equal(ref.spike_vector(c),
+                                      sb.spike_vector(c))
+    a, b = ref.snapshot(), sb.snapshot()
+    np.testing.assert_array_equal(a.power_trace, b.power_trace)
+    assert a.fraction == b.fraction and a.n_samples == b.n_samples
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_batched_engine_is_bit_identical_to_perjob_builders(scenario_seed):
+    """ISSUE 7 pin: under arbitrary job interleavings, chunk splits, and
+    mid-stream retire/admit (with slot reuse), the columnar engine's state
+    is bit-for-bit identical to one ``ProfileBuilder`` per job — spike
+    histograms, committed traces, snapshots, and finalized profiles."""
+    rng = np.random.default_rng(scenario_seed)
+    eng = BatchProfileEngine(capacity=2)       # force slot-array growth
+
+    def new_job(name):
+        n = int(rng.integers(1, 1200))
+        meta, e, b = _synthetic_counters(int(rng.integers(0, 10 ** 6)), n,
+                                         name)
+        cuts = sorted({int(c) for c in
+                       rng.integers(1, max(n, 2),
+                                    size=int(rng.integers(0, 6)))
+                       if 0 < c < n})
+        bounds = [0] + cuts + [n]
+        chunks = [TelemetryChunk(energy_j=e[i + 1:j + 1],
+                                 busy_s=b[i + 1:j + 1],
+                                 sample_dt=meta.sample_dt, start_index=i)
+                  for i, j in zip(bounds[:-1], bounds[1:])]
+        return dict(ref=ProfileBuilder(meta, TDP),
+                    sb=eng.builder(meta, TDP), chunks=chunks, pos=0)
+
+    live = {f"j{k}": new_job(f"j{k}")
+            for k in range(int(rng.integers(2, 5)))}
+    admits_left, next_id = 3, 100
+    while live:
+        remaining = [j for j in sorted(live)
+                     if live[j]["pos"] < len(live[j]["chunks"])]
+        if remaining:
+            # random tick: a random subset of unfinished jobs polls at once
+            tick = [j for j in remaining if rng.random() < 0.7] \
+                or [remaining[0]]
+            slots, chunks = [], []
+            for jid in tick:
+                job = live[jid]
+                ck = job["chunks"][job["pos"]]
+                job["pos"] += 1
+                job["ref"].ingest(ck)
+                slots.append(job["sb"].slot)
+                chunks.append(ck)
+            eng.ingest_batch(slots, chunks)
+            _assert_builder_match(live[tick[0]]["ref"], live[tick[0]]["sb"])
+        # mid-stream retire (slot goes back to the free list mid-run)
+        if rng.random() < 0.15:
+            jid = sorted(live)[int(rng.integers(len(live)))]
+            job = live.pop(jid)
+            _assert_builder_match(job["ref"], job["sb"])
+            job["sb"].release()
+            if admits_left and rng.random() < 0.5:   # slot reuse
+                admits_left -= 1
+                live[f"n{next_id}"] = new_job(f"n{next_id}")
+                next_id += 1
+        # fully-fed jobs: finalize must match bit-for-bit, then free
+        for jid in [j for j in sorted(live)
+                    if live[j]["pos"] >= len(live[j]["chunks"])]:
+            job = live.pop(jid)
+            _assert_builder_match(job["ref"], job["sb"])
+            a, b = job["ref"].finalize(), job["sb"].finalize()
+            np.testing.assert_array_equal(a.power_trace, b.power_trace)
+            assert a.fraction == b.fraction and a.n_samples == b.n_samples
+            assert a.complete and b.complete
+            job["sb"].release()
+
+
+def test_batched_engine_poisoned_tick_is_all_or_nothing():
+    """A poisoned chunk raises the per-job builder's message and leaves
+    every slot in the tick untouched (no partial mutation)."""
+    eng = BatchProfileEngine()
+    meta_a, ea, ba = _synthetic_counters(1, 300, "a")
+    meta_b, eb, bb = _synthetic_counters(2, 300, "b")
+    sa, sb_ = eng.builder(meta_a, TDP), eng.builder(meta_b, TDP)
+    bad = eb[1:301].copy()
+    bad[50] = np.nan
+    with pytest.raises(ValueError, match="NaN/non-finite energy_j"):
+        eng.ingest_batch(
+            (sa.slot, sb_.slot),
+            (TelemetryChunk(energy_j=ea[1:301], busy_s=ba[1:301],
+                            sample_dt=1e-3, start_index=0),
+             TelemetryChunk(energy_j=bad, busy_s=bb[1:301],
+                            sample_dt=1e-3, start_index=0)))
+    assert sa.n_ingested == 0 and sb_.n_ingested == 0
+
+
+def test_mux_ticks_batches_equal_timestamps_in_chunk_order():
+    """ISSUE 7 satellite: ``ticks()`` yields all equal-``t_end`` chunks as
+    one batch, and concatenating the batches reproduces ``__iter__``'s
+    exact chunk sequence."""
+    def build():
+        mux = FleetTelemetryMux()
+        for i, fn in enumerate([micro_gemm, micro_idle_burst,
+                                micro_spmv_memory]):
+            meta, chunks = _job_stream(fn, seed=i, device_id=f"dev/{i}")
+            mux.add_job(f"job{i}", meta, chunks)
+        return mux
+    flat = [(fc.job_id, fc.t_end, fc.chunk.start_index)
+            for fc in build()]
+    ticked = []
+    n_batches = 0
+    for batch in build().ticks():
+        n_batches += 1
+        assert len({fc.t_end for fc in batch}) == 1   # one poll instant
+        ticked.extend((fc.job_id, fc.t_end, fc.chunk.start_index)
+                      for fc in batch)
+    assert ticked == flat
+    assert n_batches < len(flat)     # equal timestamps really coalesced
+
+
+def test_fleet_batched_engine_matches_perjob_engine(micro_library):
+    """Fleet-level pin: engine='batched' through the tick path produces the
+    byte-identical decisions and final packing as engine='perjob' through
+    the per-chunk path, and repack='tick' converges to the same packing."""
+    jobs = [(micro_gemm, 0), (micro_spmv_memory, 1), (micro_spmv_compute, 2),
+            (micro_idle_burst, 3)]
+
+    def run(engine, repack, per_chunk=False):
+        inv = DeviceInventory.generate(4, VariabilityModel(), seed=7)
+        fleet = FleetCapController(micro_library, budget_w=5000.0,
+                                   engine=engine, repack=repack, **GATES)
+        mux = FleetTelemetryMux()
+        for (fn, seed), dev in zip(jobs, inv):
+            meta, chunks = _job_stream(fn, seed=seed,
+                                       device_id=dev.device_id)
+            mux.add_job(fleet.admit(dev, meta, chips=4), meta, chunks)
+        if per_chunk:
+            for fc in mux:
+                fleet.ingest(fc)
+            return fleet.finalize()
+        return fleet.run(mux)
+
+    ref = run("perjob", "decision", per_chunk=True)
+    got = run("batched", "decision")
+    assert set(got.decisions) == set(ref.decisions)
+    for job_id, expect in ref.decisions.items():
+        assert got.decisions[job_id] == expect
+    assert got.repacks == ref.repacks
+    assert got.schedule == ref.schedule
+    assert got.chunks_dropped == ref.chunks_dropped
+    # tick-cadence repacking: fewer scheduler calls, same final packing
+    coarse = run("batched", "tick")
+    assert coarse.decisions == ref.decisions
+    assert coarse.schedule == ref.schedule
+    assert coarse.repacks <= ref.repacks

@@ -19,6 +19,7 @@ FACADE_FILES = [
     "examples/quickstart.py",
     "examples/fleet_power_planner.py",
     "benchmarks/bench_fleet.py",
+    "benchmarks/bench_fleet_scale.py",
     "benchmarks/bench_online_cap.py",
     "benchmarks/bench_chaos.py",
     "benchmarks/bench_recovery.py",

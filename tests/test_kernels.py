@@ -97,3 +97,26 @@ def test_flash_attention_matches_model_chunked_path():
     o_kernel = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
     np.testing.assert_allclose(np.asarray(o_model), np.asarray(o_kernel),
                                rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("jobs,n,n_bins,c", [(1, 100, 15, 0.1),
+                                             (13, 300, 10, 0.15),
+                                             (9, 1000, 30, 0.05),
+                                             (32, 257, 3, 0.5)])
+def test_spike_hist_batch_sweep(jobs, n, n_bins, c):
+    """Batched (jobs x samples) histogram kernel == per-row f32 binning;
+    -inf padding/masking never counted (the ragged-commit mask contract)."""
+    from repro.kernels.spike_hist import spike_hist_batch_pallas
+    rng = np.random.default_rng(jobs * 1000 + n)
+    r = rng.uniform(0.0, 2.5, size=(jobs, n)).astype(np.float32)
+    r = np.where(rng.random((jobs, n)) < 0.8, r, -np.inf).astype(np.float32)
+    got = np.asarray(spike_hist_batch_pallas(jnp.asarray(r), n_bins, lo=0.5,
+                                             bin_width=c, interpret=True))
+    want = np.zeros((jobs, n_bins), np.float32)
+    for i in range(jobs):
+        row = r[i][r[i] >= 0.5]
+        idx = np.floor((row - np.float32(0.5)) / np.float32(c)) \
+            .astype(np.int32)
+        want[i] = np.bincount(np.minimum(idx, n_bins - 1),
+                              minlength=n_bins).astype(np.float32)
+    np.testing.assert_array_equal(got, want)

@@ -566,3 +566,56 @@ def test_meta_roundtrip_preserves_traces():
     rebuilt = meta_from_record(json.loads(json.dumps(meta_record(meta))))
     assert rebuilt == meta
     assert isinstance(rebuilt, TraceMeta)
+
+
+def test_journal_batch_coalesces_flushes_and_recovers(tmp_path):
+    """ISSUE 7 satellite: appends inside ``batch()`` defer their flush to
+    batch exit — small records stay in the stdio buffer mid-batch — yet the
+    file recovers every record intact afterwards."""
+    jp = str(tmp_path / JOURNAL_FILE)
+    journal = EventJournal(jp)
+    journal.append("open", {})               # unbatched: flushed eagerly
+    base = os.path.getsize(jp)
+    with journal.batch():
+        for i in range(3):                   # 3 tiny records << 8K buffer
+            journal.append("tick", {"i": i})
+        assert os.path.getsize(jp) == base   # nothing flushed mid-batch
+        with journal.batch():                # re-entrant: still deferred
+            journal.append("tick", {"i": 3})
+        assert os.path.getsize(jp) == base
+    assert os.path.getsize(jp) > base        # one flush at batch exit
+    journal.close()
+    records, good = EventJournal.recover(jp)
+    assert [r.kind for r in records] == ["open"] + ["tick"] * 4
+    assert good == os.path.getsize(jp)
+
+
+def test_journal_batch_preserves_fsync_per_record(tmp_path):
+    """fsync=True journals keep per-record flush (+fsync) inside a batch —
+    explicit durability is never weakened by coalescing."""
+    jp = str(tmp_path / JOURNAL_FILE)
+    journal = EventJournal(jp, fsync=True)
+    with journal.batch():
+        journal.append("tick", {"i": 0})
+        size_after_first = os.path.getsize(jp)
+        assert size_after_first > 0          # hit the OS immediately
+        journal.append("tick", {"i": 1})
+        assert os.path.getsize(jp) > size_after_first
+    journal.close()
+    records, _ = EventJournal.recover(jp)
+    assert len(records) == 2
+
+
+def test_session_store_batch_delegates_and_snapshots_stay_safe(tmp_path):
+    """SessionStore.batch() wraps the journal; a snapshot written mid-batch
+    (past the unflushed tail) is skipped by load_snapshot after a crash
+    that tears the tail — the max_seq guard."""
+    store = SessionStore.create(str(tmp_path / "s"))
+    with store.batch():
+        for i in range(4):
+            store.record("tick", i=i)
+    assert store.journal.last_seq == 4
+    store.close()
+    reopened = SessionStore.open_existing(str(tmp_path / "s"))
+    assert [r.data["i"] for r in reopened.recovered_records] == [0, 1, 2, 3]
+    reopened.close()
