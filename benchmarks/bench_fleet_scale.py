@@ -26,9 +26,20 @@ Emits one ``emit()`` row and writes ``results/fleet_scale.json``:
   * ``clf_calls_on_repack`` — classifier invocations triggered by a
     post-run ``set_budget`` re-pack — expected **0** (cached plans only).
 
+ISSUE 8 splits the control-plane cost out of the aggregate number:
+  * ``admit_jobs_per_s``    — bulk-admission rate through ONE
+    ``FleetCapController.admit_many`` call (validate whole batch, one
+    coalesced journal flush), with its own floor;
+  * ``repack``              — a replay of the drained plan population
+    through the maintained ``IncrementalPacker`` vs a from-scratch
+    ``pack()`` per control-plane event (the pre-ISSUE-8 cost model):
+    total wall-clock for both, the speedup (floored), and a byte-identity
+    check that the maintained placement equals the full pack's.
+
 ``--smoke`` runs a 2 000-job micro-zoo configuration with a conservative
 throughput floor for CI; the full run asserts >= 10 000 concurrent jobs at
->= 3 500 jobs/s (>= 10x the PR 3 per-job loop).
+>= 3 500 jobs/s (>= 10x the PR 3 per-job loop) and a >= 10x repack-cost
+reduction.
 """
 from __future__ import annotations
 
@@ -59,6 +70,38 @@ def _sustained(agg: np.ndarray, window: int = SUSTAIN_WINDOW) -> np.ndarray:
     return np.convolve(agg, kernel, mode="valid")
 
 
+def _repack_microbench(scheduler, plans, budget: float):
+    """Replay the drained population as a control-plane event stream — one
+    admission per plan plus a budget squeeze-and-release — through the
+    maintained packer and through a from-scratch ``pack()`` per event (what
+    every repack cost before the incremental path).  Both sides produce a
+    repack answer after every event — the packer's deferred re-flow is
+    forced by the per-event ``stats()`` read, so the comparison stays
+    apples-to-apples.  Returns the two wall-clocks and both final
+    placements for the byte-identity check."""
+    plans = list(plans)
+    t0 = time.perf_counter()
+    packer = scheduler.packer(budget)
+    for plan in plans:
+        packer.insert(plan)
+        packer.stats()
+    packer.set_budget(budget * 0.9)
+    packer.stats()
+    packer.set_budget(budget)
+    t_incremental = time.perf_counter() - t0
+    incremental = packer.result()
+
+    t0 = time.perf_counter()
+    live = []
+    for plan in plans:
+        live.append(plan)
+        full = scheduler.pack(live, budget)
+    scheduler.pack(live, budget * 0.9)
+    full = scheduler.pack(live, budget)
+    t_full = time.perf_counter() - t0
+    return t_incremental, t_full, incremental, full
+
+
 def run(smoke: bool = False) -> dict:
     if smoke:
         counts = {"tpu-v5e": 4, "tpu-v5p": 2}
@@ -80,6 +123,8 @@ def run(smoke: bool = False) -> dict:
         jobs = fleet_job_mix(10_000, seed=11)
         floor_jobs_per_s = 3_500.0
         min_concurrent = 10_000
+    floor_admit_jobs_per_s = 3_000.0 if smoke else 5_000.0
+    floor_repack_speedup = 5.0 if smoke else 10.0
     target_duration = 0.4
 
     # zero variability: devices of one model share a power frame, so
@@ -117,18 +162,23 @@ def run(smoke: bool = False) -> dict:
                                    **GATES)
         mux = FleetTelemetryMux()
         t0 = time.perf_counter()
-        for i, (stream, chips, dev) in enumerate(assigned):
-            meta, chunks = telemetry[(stream.name, dev.model)]
-            job_id = fleet.admit(dev, meta, chips=chips,
-                                 job_id=f"j{i:05d}:{stream.name}")
-            mux.add_job(job_id, meta, chunks, device_id=dev.device_id)
+        # bulk admission: the whole fleet lands through ONE validated call
+        job_ids = fleet.admit_many(
+            dict(device=dev, meta=telemetry[(stream.name, dev.model)][0],
+                 chips=chips, job_id=f"j{i:05d}:{stream.name}")
+            for i, (stream, chips, dev) in enumerate(assigned))
         t_admit = time.perf_counter() - t0
+        for (stream, chips, dev), job_id in zip(assigned, job_ids):
+            meta, chunks = telemetry[(stream.name, dev.model)]
+            mux.add_job(job_id, meta, chunks, device_id=dev.device_id)
         result = fleet.run(mux)
         elapsed = time.perf_counter() - t0
         if best is None or elapsed < best[0]:
             best = (elapsed, t_admit, fleet, result)
     elapsed, t_admit, fleet, result = best
     jobs_per_s = len(assigned) / elapsed
+    admit_jobs_per_s = len(assigned) / t_admit
+    drive_repack_s = fleet.repack_s          # incremental path, whole drive
 
     # repacks must never re-classify: cached JobPlans only
     calls = count_classifier_calls(fleet.clf)
@@ -162,6 +212,18 @@ def run(smoke: bool = False) -> dict:
     sustained = _sustained(aggregate)
     violations = int(np.sum(sustained > budget))
 
+    # repack-cost split: maintained packer vs full pack per event over the
+    # drained population, plus the byte-identity bar the tentpole promises
+    decided_plans = [j.plan for j in fleet.jobs.values()
+                     if j.plan is not None]
+    t_inc, t_full, inc_res, full_res = _repack_microbench(
+        fleet.scheduler, decided_plans, budget)
+    repack_speedup = t_full / t_inc if t_inc > 0 else float("inf")
+    packs_identical = (
+        [p.job_id for p in inc_res.placed]
+        == [p.job_id for p in full_res.placed]
+        and inc_res.deferred == full_res.deferred)
+
     engine = fleet.engine
     slot_bytes = sum(h.itemsize * h.shape[1] for h in engine._hist.values())
     out = {
@@ -178,8 +240,17 @@ def run(smoke: bool = False) -> dict:
             "attempts": attempts,
         },
         "jobs_per_s": round(jobs_per_s, 1),
+        "admit_jobs_per_s": round(admit_jobs_per_s, 1),
         "admit_s": round(t_admit, 3),
         "run_s": round(elapsed - t_admit, 3),
+        "repack": {
+            "events": len(decided_plans) + 2,
+            "incremental_s": round(t_inc, 4),
+            "full_s": round(t_full, 4),
+            "speedup": round(repack_speedup, 1),
+            "byte_identical": packs_identical,
+            "drive_repack_s": round(drive_repack_s, 4),
+        },
         "early_decisions": result.early_decisions,
         "decisions": len(result.decisions),
         "repacks": result.repacks,
@@ -199,6 +270,7 @@ def run(smoke: bool = False) -> dict:
         json.dump(out, f, indent=1)
     emit("fleet_scale_batched", elapsed * 1e6,
          f"jobs={len(assigned)};jobs/s={jobs_per_s:.0f};"
+         f"admit/s={admit_jobs_per_s:.0f};repack_x={repack_speedup:.0f};"
          f"violations={violations};clf_on_repack={clf_calls_on_repack}")
     assert len(assigned) >= min_concurrent
     assert len(result.decisions) == len(assigned), (
@@ -211,6 +283,16 @@ def run(smoke: bool = False) -> dict:
     assert jobs_per_s >= floor_jobs_per_s, (
         f"throughput regression: {jobs_per_s:.0f} jobs/s < floor "
         f"{floor_jobs_per_s:.0f}")
+    assert admit_jobs_per_s >= floor_admit_jobs_per_s, (
+        f"bulk-admission regression: {admit_jobs_per_s:.0f} jobs/s < floor "
+        f"{floor_admit_jobs_per_s:.0f}")
+    assert packs_identical, (
+        "incremental packer diverged from the full pack on the drained "
+        "population")
+    assert repack_speedup >= floor_repack_speedup, (
+        f"repack-cost regression: incremental path is only "
+        f"{repack_speedup:.1f}x cheaper than full packs (floor "
+        f"{floor_repack_speedup:.0f}x)")
     return out
 
 

@@ -55,7 +55,8 @@ from repro.pipeline.builder import (PartialProfile, ProfileBuilder,
 from repro.pipeline.library import ReferenceLibrary, build_reference_library
 from repro.pipeline.online import CapDecision, OnlineCapController
 from repro.sched.dvfs import FrequencyActuator, SimActuator
-from repro.sched.power_sched import (JobPlan, PowerAwareScheduler,
+from repro.sched.power_sched import (IncrementalPacker, JobPlan,
+                                     PowerAwareScheduler, RepackStats,
                                      ScheduleResult)
 from repro.store import (EventJournal, JournalRecord, NoStoreError,
                          SessionStore, SnapshotStore, StoreError,
@@ -80,6 +81,7 @@ __all__ = [
     "ObjectivePolicy", "QuantilePolicy", "resolve_objective",
     # result objects + codec
     "CapDecision", "JobPlan", "ScheduleResult", "FreqSelection",
+    "IncrementalPacker", "RepackStats",
     "to_dict", "from_dict", "to_json", "from_json",
     # streaming pipeline
     "ProfileBuilder", "PartialProfile", "ReferenceLibrary",

@@ -31,10 +31,12 @@ import json
 import math
 import os
 import warnings
+from contextlib import nullcontext
 
 from repro.api.registry import ACTUATORS, OBJECTIVES, QUANTILES
 from repro.core.algorithm1 import resolve_objective
-from repro.fleet.controller import FleetCapController, FleetEvent, FleetJob
+from repro.fleet.controller import FleetCapController, FleetEvent, \
+    FleetJob, RepackTrail
 from repro.fleet.inventory import DEGRADED, FAILED, DeviceInstance, \
     DeviceInventory, VariabilityModel
 from repro.fleet.mux import FleetTelemetryMux
@@ -581,7 +583,9 @@ class MinosSession:
             if rec["decision"] is not None:
                 job.decision = from_dict(rec["decision"])
             if rec["plan"] is not None:
-                job.plan = from_dict(rec["plan"])
+                # through _set_plan so the incremental packer adopts the
+                # restored plan population too
+                fleet._set_plan(job, from_dict(rec["plan"]))
             job.needs_reprofile = bool(rec["needs_reprofile"])
         if self.inventory is not None:
             for device_id, health in state["device_health"].items():
@@ -599,8 +603,8 @@ class MinosSession:
         if state["schedule"] is not None:
             # only len() and [-1] are ever observed, so padding with the
             # final schedule preserves both without storing the whole trail
-            fleet.repacks = [from_dict(state["schedule"])] \
-                * max(int(state["repacks"]), 1)
+            fleet.repacks = RepackTrail([from_dict(state["schedule"])]
+                                        * max(int(state["repacks"]), 1))
 
     def _replay_admit(self, rec: dict) -> None:
         device = device_from_record(rec["device"])
@@ -709,26 +713,7 @@ class MinosSession:
             # (before the admit record) so replayed sessions keep placing
             # later submits on the same devices
             self._store.record("cursor", rr=self._rr)
-        chunks = None
-        if isinstance(source, KernelStream):
-            meta, chunks = stream_telemetry(
-                source, freq, device.power_model(),
-                device_id=device.device_id, **telemetry_kw)
-        elif isinstance(source, TraceMeta):
-            if telemetry_kw:
-                raise ValueError(f"telemetry options {sorted(telemetry_kw)} "
-                                 f"only apply when submitting a KernelStream")
-            meta = source
-        elif isinstance(source, tuple) and len(source) == 2 \
-                and isinstance(source[0], TraceMeta):
-            if telemetry_kw:
-                raise ValueError(f"telemetry options {sorted(telemetry_kw)} "
-                                 f"only apply when submitting a KernelStream")
-            meta, chunks = source
-        else:
-            raise TypeError(f"submit() takes a KernelStream, a TraceMeta, or "
-                            f"a (meta, chunks) pair, got "
-                            f"{type(source).__name__}")
+        meta, chunks = self._parse_source(source, device, freq, telemetry_kw)
         if job_id is None:
             job_id = self._unique_job_id(f"{meta.name}@{device.device_id}")
         job_id = self._fleet.admit(device, meta, chips=chips, job_id=job_id,
@@ -738,6 +723,92 @@ class MinosSession:
         handle = JobHandle(self, self._fleet.jobs[job_id], meta, chunks)
         self._handles[job_id] = handle
         return handle
+
+    def submit_many(self, sources, device=None, chips=1, job_ids=None,
+                    profile_to_completion: bool = False, freq: float = 1.0,
+                    **telemetry_kw) -> list[JobHandle]:
+        """Bulk admission: admit a whole batch of jobs through one fleet
+        call and one coalesced journal flush — the fleet-scale submit path.
+
+        ``sources`` is an iterable of :meth:`submit` sources (a
+        ``KernelStream``, a ``(meta, chunks)`` pair, or a bare
+        ``TraceMeta``).  ``device`` applies to every job (``None`` =
+        round-robin placement over healthy inventory, resolved per job
+        exactly as sequential submits would).  ``chips`` is one count for
+        all jobs or a per-job sequence; ``job_ids`` an optional per-job
+        sequence (auto ids are de-duplicated with the same ``#k`` suffixes
+        sequential submits produce).  Returns the handles in batch order.
+
+        Session state, placement, and resume behavior are identical to
+        calling ``submit`` once per source; the batch writes one cursor
+        record (the final round-robin position) plus all admit records in
+        a single buffered store flush.  Multi-device spans (``devices``/
+        ``mesh``/``global_batch``) stay on ``submit``."""
+        sources = list(sources)
+        n = len(sources)
+        chips_list = [int(chips)] * n if isinstance(chips, int) \
+            else [int(c) for c in chips]
+        if len(chips_list) != n:
+            raise ValueError(f"chips sequence has {len(chips_list)} entries "
+                             f"for {n} sources")
+        if job_ids is not None:
+            job_ids = list(job_ids)
+            if len(job_ids) != n:
+                raise ValueError(f"job_ids has {len(job_ids)} entries for "
+                                 f"{n} sources")
+        rr_before = self._rr
+        parsed = []
+        for source in sources:
+            dev = self._resolve_device(device)
+            meta, chunks = self._parse_source(source, dev, freq,
+                                              telemetry_kw)
+            parsed.append((dev, meta, chunks))
+        taken: set[str] = set()
+        admissions = []
+        for i, (dev, meta, _) in enumerate(parsed):
+            jid = job_ids[i] if job_ids is not None else None
+            if jid is None:
+                jid = self._unique_job_id(f"{meta.name}@{dev.device_id}",
+                                          taken)
+            taken.add(jid)
+            admissions.append(dict(
+                device=dev, meta=meta, chips=chips_list[i], job_id=jid,
+                profile_to_completion=profile_to_completion))
+        ctx = self._store.batch() if self._store is not None \
+            else nullcontext()
+        with ctx:
+            if self._store is not None and self._rr != rr_before:
+                # one cursor record for the whole batch: replay lands the
+                # round-robin exactly where the sequential loop would
+                self._store.record("cursor", rr=self._rr)
+            ids = self._fleet.admit_many(admissions)
+        handles = []
+        for jid, (dev, meta, chunks) in zip(ids, parsed):
+            handle = JobHandle(self, self._fleet.jobs[jid], meta, chunks)
+            self._handles[jid] = handle
+            handles.append(handle)
+        return handles
+
+    def _parse_source(self, source, device, freq, telemetry_kw):
+        """Normalize a submit source into ``(meta, chunks)``."""
+        if isinstance(source, KernelStream):
+            return stream_telemetry(
+                source, freq, device.power_model(),
+                device_id=device.device_id, **telemetry_kw)
+        if isinstance(source, TraceMeta):
+            if telemetry_kw:
+                raise ValueError(f"telemetry options {sorted(telemetry_kw)} "
+                                 f"only apply when submitting a KernelStream")
+            return source, None
+        if isinstance(source, tuple) and len(source) == 2 \
+                and isinstance(source[0], TraceMeta):
+            if telemetry_kw:
+                raise ValueError(f"telemetry options {sorted(telemetry_kw)} "
+                                 f"only apply when submitting a KernelStream")
+            return source
+        raise TypeError(f"submit() takes a KernelStream, a TraceMeta, or "
+                        f"a (meta, chunks) pair, got "
+                        f"{type(source).__name__}")
 
     def retire(self, job_id: str) -> JobPlan | None:
         """Retire a job: its telemetry stops counting and its plan leaves
@@ -856,9 +927,12 @@ class MinosSession:
             self._default_device = DeviceInventory.generate(1)[0]
         return self._default_device
 
-    def _unique_job_id(self, base: str) -> str:
+    def _unique_job_id(self, base: str, taken=()) -> str:
+        """De-duplicate a default job_id; ``taken`` carries ids claimed
+        earlier in the same ``submit_many`` batch."""
         job_id, k = base, 1
-        while job_id in self._fleet.jobs or job_id in self._retired:
+        while job_id in self._fleet.jobs or job_id in self._retired \
+                or job_id in taken:
             k += 1
             job_id = f"{base}#{k}"
         return job_id

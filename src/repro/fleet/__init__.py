@@ -32,7 +32,7 @@ Three layers:
     see ``repro.ft`` and ``benchmarks/bench_chaos.py``).
 """
 from repro.fleet.controller import (FleetCapController, FleetEvent, FleetJob,
-                                    FleetResult)
+                                    FleetResult, RepackTrail)
 from repro.fleet.inventory import (DEGRADED, FAILED, HEALTHY, DeviceInstance,
                                    DeviceInventory, VariabilityModel)
 from repro.fleet.mux import FleetChunk, FleetTelemetryMux
@@ -41,5 +41,6 @@ __all__ = [
     "DeviceInstance", "DeviceInventory", "VariabilityModel",
     "FleetChunk", "FleetTelemetryMux",
     "FleetCapController", "FleetEvent", "FleetJob", "FleetResult",
+    "RepackTrail",
     "HEALTHY", "DEGRADED", "FAILED",
 ]

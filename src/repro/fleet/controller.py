@@ -40,8 +40,10 @@ injection.
 """
 from __future__ import annotations
 
+import warnings
 from contextlib import nullcontext
 from dataclasses import dataclass, field
+from time import perf_counter
 
 from repro.configs.base import MeshConfig
 from repro.core.classify import MinosClassifier
@@ -57,8 +59,67 @@ from repro.pipeline.library import ReferenceLibrary
 from repro.pipeline.online import CapDecision, OnlineCapController, \
     finalize_fleet, observe_fleet
 from repro.sched.dvfs import SimActuator
-from repro.sched.power_sched import JobPlan, PowerAwareScheduler, \
-    ScheduleResult
+from repro.sched.power_sched import IncrementalPacker, JobPlan, \
+    PowerAwareScheduler, RepackStats, ScheduleResult
+
+
+class _PendingRepack:
+    """A re-pack recorded but not yet materialized: holds the live packer
+    plus the exact power totals at record time.  If the packer has not
+    moved on, resolving yields the full ``ScheduleResult`` (byte-identical
+    to ``pack()``); once superseded, only the totals survive as
+    ``RepackStats`` — per-job placements of historical packs are not kept
+    at fleet scale."""
+
+    __slots__ = ("packer", "version", "planned_w", "nameplate_w", "budget_w")
+
+    def __init__(self, packer: IncrementalPacker):
+        self.packer = packer
+        self.version = packer.version
+        self.planned_w = packer.planned_power_w
+        self.nameplate_w = packer.nameplate_power_w
+        self.budget_w = packer.budget_w
+
+    def resolve(self):
+        if self.version == self.packer.version:
+            return self.packer.result()
+        return RepackStats(self.planned_w, self.nameplate_w, self.budget_w)
+
+
+class RepackTrail(list):
+    """``FleetCapController.repacks`` with lazy materialization.
+
+    The incremental path appends an O(1) ``_PendingRepack`` marker per
+    re-pack instead of an O(n) ``ScheduleResult``; reading an entry (by
+    index, slice, or iteration) resolves it in place — the most recent
+    entry to the full byte-identical ``ScheduleResult``, superseded ones
+    to their ``RepackStats`` power totals.  Every aggregate consumer
+    (budget sweeps over history, reports, ``repacks[-1]``) works
+    unchanged; only per-job placements of *historical* packs are gone."""
+
+    __slots__ = ()
+
+    def append_lazy(self, packer: IncrementalPacker) -> None:
+        list.append(self, _PendingRepack(packer))
+
+    def _resolve(self, i: int):
+        entry = list.__getitem__(self, i)
+        if type(entry) is _PendingRepack:
+            entry = entry.resolve()
+            list.__setitem__(self, i, entry)
+        return entry
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._resolve(j) for j in range(*i.indices(len(self)))]
+        if i < 0:
+            i += len(self)
+        return self._resolve(i)
+
+    def __iter__(self):
+        # list iteration bypasses __getitem__; resolve explicitly
+        for i in range(len(self)):
+            yield self._resolve(i)
 
 
 @dataclass(frozen=True)
@@ -135,7 +196,7 @@ class FleetCapController:
                  inventory: DeviceInventory | None = None,
                  straggler_adapter: FleetStragglerAdapter | None = None,
                  journal=None, engine: str = "batched",
-                 repack: str = "decision"):
+                 repack: str = "decision", packer: str = "incremental"):
         """``engine`` selects the builder state layout: ``"batched"``
         (default) backs every job by one slot of a shared columnar
         ``BatchProfileEngine`` — bit-identical to ``"perjob"`` (one
@@ -144,7 +205,13 @@ class FleetCapController:
         cadence: ``"decision"`` (default) re-packs on every landed decision
         exactly like the per-chunk path; ``"tick"`` coalesces to one re-pack
         per mux tick — same final packing, O(ticks) instead of O(decisions)
-        scheduler calls, the fleet-scale mode."""
+        scheduler calls, the fleet-scale mode.  ``packer`` selects how each
+        re-pack is computed: ``"incremental"`` (default) maintains the
+        decided plans in an ``IncrementalPacker`` so every plan mutation
+        updates only the affected tail of the first-fit pass —
+        byte-identical results to ``"full"`` (one ``PowerAwareScheduler.
+        pack`` sweep per re-pack, the hypothesis-pinned reference) at
+        O(block + n/block) per event instead of O(n log n)."""
         if isinstance(references, ReferenceLibrary):
             self.clf = references.classifier()
         elif isinstance(references, MinosClassifier):
@@ -170,8 +237,15 @@ class FleetCapController:
         if repack not in ("decision", "tick"):
             raise ValueError(f"repack must be 'decision' or 'tick', "
                              f"got {repack!r}")
+        if packer not in ("incremental", "full"):
+            raise ValueError(f"packer must be 'incremental' or 'full', "
+                             f"got {packer!r}")
         self.engine = BatchProfileEngine() if engine == "batched" else None
         self.repack_mode = repack
+        self.packer_mode = packer
+        self._packer = self.scheduler.packer(self.budget_w) \
+            if packer == "incremental" else None
+        self.repack_s = 0.0          # wall-clock spent maintaining packings
         self.inventory = inventory
         self.straggler_adapter = straggler_adapter
         # write-ahead session store (repro.store.SessionStore), attached by
@@ -180,7 +254,7 @@ class FleetCapController:
         # controller
         self.journal = journal
         self.jobs: dict[str, FleetJob] = {}
-        self.repacks: list[ScheduleResult] = []
+        self.repacks = RepackTrail()
         self.events: list[FleetEvent] = []
         self._dropped = 0
         self._failed_devices: set[str] = set()
@@ -253,8 +327,48 @@ class FleetCapController:
         frame) with ``chips`` divided evenly across it, plus an optional
         ``mesh``/``global_batch`` so a partial device loss can re-mesh
         through ``ft.plan_new_mesh``/``rescale_batch``."""
+        spec = self._admit_validate(
+            device, meta, chips=chips, job_id=job_id,
+            profile_to_completion=profile_to_completion, devices=devices,
+            mesh=mesh, global_batch=global_batch)
+        self._journal_admit(spec)
+        self._admit_apply(spec)
+        self._sync_store()
+        return spec["job_id"]
+
+    def admit_many(self, admissions) -> list[str]:
+        """Bulk admission: validate a whole batch up front (atomically — a
+        bad entry rejects the batch before anything is journaled or
+        applied), then journal every admit record in one coalesced store
+        flush and apply them in order.  ``admissions`` is an iterable of
+        dicts with :meth:`admit`'s keyword arguments (``device`` and
+        ``meta`` required).  Returns the ``job_id``s in batch order.
+
+        Journal bytes, job state, and placement are identical to calling
+        ``admit`` once per entry; only the store-flush count changes."""
+        taken: set[str] = set()
+        specs = [self._admit_validate(taken=taken, **kw)
+                 for kw in admissions]
+        ctx = self.journal.batch() if self.journal is not None \
+            else nullcontext()
+        with ctx:
+            for spec in specs:
+                self._journal_admit(spec)
+            for spec in specs:
+                self._admit_apply(spec)
+        self._sync_store()
+        return [spec["job_id"] for spec in specs]
+
+    def _admit_validate(self, device: DeviceInstance, meta, chips: int = 1,
+                        job_id: str | None = None,
+                        profile_to_completion: bool = False,
+                        devices=None, mesh: MeshConfig | None = None,
+                        global_batch: int | None = None,
+                        taken: set | None = None) -> dict:
+        """Shared admission checks; ``taken`` carries job_ids earlier in the
+        same batch so bulk admission sees in-flight duplicates."""
         job_id = job_id or f"{meta.name}@{device.device_id}"
-        if job_id in self.jobs:
+        if job_id in self.jobs or (taken is not None and job_id in taken):
             raise ValueError(f"duplicate job_id {job_id!r}")
         span = tuple(devices) if devices else (device,)
         if device not in span:
@@ -271,28 +385,41 @@ class FleetCapController:
                         and not self.inventory.is_healthy(did):
                     raise ValueError(f"cannot admit on {did!r}: device is "
                                      f"{self.inventory.health(did)}")
+        if taken is not None:
+            taken.add(job_id)
+        return dict(job_id=job_id, device=device, meta=meta,
+                    chips=int(chips), span=span,
+                    profile_to_completion=bool(profile_to_completion),
+                    mesh=mesh, global_batch=global_batch)
+
+    def _journal_admit(self, spec: dict) -> None:
         if self.journal is not None:
             # the record payload (dataclasses.asdict over meta/devices) is
             # the expensive part — only build it when a store is attached
             self._journal(
-                "admit", job_id=job_id, device=device_record(device),
-                chips=int(chips), meta=meta_record(meta),
-                profile_to_completion=bool(profile_to_completion),
-                devices=[device_record(d) for d in span],
-                mesh=mesh_record(mesh), global_batch=global_batch)
+                "admit", job_id=spec["job_id"],
+                device=device_record(spec["device"]), chips=spec["chips"],
+                meta=meta_record(spec["meta"]),
+                profile_to_completion=spec["profile_to_completion"],
+                devices=[device_record(d) for d in spec["span"]],
+                mesh=mesh_record(spec["mesh"]),
+                global_batch=spec["global_batch"])
+
+    def _admit_apply(self, spec: dict) -> None:
+        device = spec["device"]
         actuator = self.actuator_factory(device) \
             if self.actuator_factory is not None else None
         controller = OnlineCapController(
             self.clf, objective=self.objective, actuator=actuator,
             device_id=device.device_id, **self._gates)
-        self.jobs[job_id] = FleetJob(
-            job_id=job_id, device=device, chips=int(chips),
-            builder=self._make_builder(meta, device.effective_tdp_w),
+        self.jobs[spec["job_id"]] = FleetJob(
+            job_id=spec["job_id"], device=device, chips=spec["chips"],
+            builder=self._make_builder(spec["meta"],
+                                       device.effective_tdp_w),
             controller=controller, actuator=actuator,
-            profile_to_completion=profile_to_completion,
-            devices=span, mesh=mesh, global_batch=global_batch)
-        self._sync_store()
-        return job_id
+            profile_to_completion=spec["profile_to_completion"],
+            devices=spec["span"], mesh=spec["mesh"],
+            global_batch=spec["global_batch"])
 
     # -- streaming -------------------------------------------------------
     def ingest(self, fchunk: FleetChunk) -> CapDecision | None:
@@ -511,6 +638,7 @@ class FleetCapController:
         job = self.jobs.pop(job_id)
         self._drop_builder(job.builder)
         if job.plan is not None:
+            self._unpack(job.plan)
             self._repack()
         self._sync_store()
         return job
@@ -520,7 +648,7 @@ class FleetCapController:
         the new ceiling (cached plans only — no re-classification)."""
         self._journal("budget", budget_w=float(budget_w))
         self.budget_w = float(budget_w)
-        if any(j.plan is not None for j in self.jobs.values()):
+        if self._has_plans():
             self._repack()
         self._sync_store()
 
@@ -586,7 +714,8 @@ class FleetCapController:
                 # stranded (by a fail, or a degrade drain that found no
                 # target): capacity is back, put it somewhere
                 if health == HEALTHY:
-                    job.plan = self._plan_for(job)   # its own device is back
+                    # its own device is back
+                    self._set_plan(job, self._plan_for(job))
                     if job.actuator is not None:
                         job.actuator.set_cap(job.decision.cap)
                     events.append(FleetEvent(
@@ -642,8 +771,7 @@ class FleetCapController:
             else:
                 events.append(self._migrate_job(job, device_id))
         self._emit(events)
-        if any(j.plan is not None for j in self.jobs.values()) \
-                or self.repacks:
+        if self._has_plans() or self.repacks:
             self._repack()
         return events
 
@@ -687,7 +815,8 @@ class FleetCapController:
             # nowhere to go: the job leaves the packing (draws no budget)
             # but keeps its cached decision for when capacity returns
             # (restore_device re-places strandees)
-            stranded_plan, job.plan = job.plan, None
+            stranded_plan = job.plan
+            self._set_plan(job, None)
             if job.decision is None:
                 # the partial trace died with the device: drop it so a
                 # later finalize cannot classify from the dead frame
@@ -700,9 +829,8 @@ class FleetCapController:
         detail = ""
         if job.decision is not None:
             # the free path: re-cost the cached selection on the new device
-            job.plan = self.scheduler.migrate_plan(job.plan or
-                                                   self._plan_for(job),
-                                                   target)
+            self._set_plan(job, self.scheduler.migrate_plan(
+                job.plan or self._plan_for(job), target))
         else:
             # mid-profile: the partial trace died with the device — restart
             # the profiling run in the new device's normalization frame
@@ -744,8 +872,9 @@ class FleetCapController:
                 self._replace_builder(job)
                 job.needs_reprofile = True
         if job.decision is not None:
-            job.plan = self.scheduler.migrate_plan(
-                job.plan or self._plan_for(job), job.device, chips=job.chips)
+            self._set_plan(job, self.scheduler.migrate_plan(
+                job.plan or self._plan_for(job), job.device,
+                chips=job.chips))
         return FleetEvent(
             "shrink", lost_device_id, job_id=job.job_id,
             to_device_id=job.device.device_id,
@@ -778,7 +907,7 @@ class FleetCapController:
         self._journal("decision", job_id=job.job_id, decision=decision,
                       plan=plan)
         job.decision = decision
-        job.plan = plan
+        self._set_plan(job, plan)
         if self.inventory is None:
             return
         for dev in list(job.devices):
@@ -792,10 +921,63 @@ class FleetCapController:
                 else:
                     self._emit([self._migrate_job(job, did)])
 
-    def _repack(self) -> ScheduleResult:
-        """Re-pack every decided job (admission order) into the budget."""
-        res = self.scheduler.pack(
-            (j.plan for j in self.jobs.values() if j.plan is not None),
-            budget_w=self.budget_w)
-        self.repacks.append(res)
-        return res
+    def _set_plan(self, job: FleetJob, plan: JobPlan | None) -> None:
+        """The one way a job's plan changes: assign it and keep the
+        incremental packer's population in lockstep.  Any plan the packer
+        cannot hold exactly (non-finite power, colliding identity) degrades
+        the controller to full packs — correctness over speed."""
+        old, job.plan = job.plan, plan
+        pk = self._packer
+        if pk is None or old is plan:
+            return
+        t0 = perf_counter()
+        try:
+            if old is not None:
+                pk.remove(old)
+            if plan is not None:
+                pk.insert(plan)
+        except (KeyError, ValueError) as exc:
+            self._packer = None
+            warnings.warn(f"incremental packing disabled, falling back to "
+                          f"full re-packs: {exc}", RuntimeWarning,
+                          stacklevel=2)
+        self.repack_s += perf_counter() - t0
+
+    def _unpack(self, plan: JobPlan) -> None:
+        """A plan leaves the fleet with its job (retire): evict it from the
+        packer without touching the departed job."""
+        pk = self._packer
+        if pk is None:
+            return
+        t0 = perf_counter()
+        try:
+            pk.remove(plan)
+        except KeyError as exc:
+            self._packer = None
+            warnings.warn(f"incremental packing disabled, falling back to "
+                          f"full re-packs: {exc}", RuntimeWarning,
+                          stacklevel=2)
+        self.repack_s += perf_counter() - t0
+
+    def _has_plans(self) -> bool:
+        if self._packer is not None:
+            return len(self._packer) > 0
+        return any(j.plan is not None for j in self.jobs.values())
+
+    def _repack(self) -> None:
+        """Record the packing of every decided job into the budget.
+
+        Incremental mode appends an O(1) lazy marker — the packer already
+        tracks every plan mutation, so the ``ScheduleResult`` (byte-
+        identical to a full ``pack()``) materializes only when the entry is
+        actually read.  Full mode runs the reference O(n log n) sweep."""
+        t0 = perf_counter()
+        pk = self._packer
+        if pk is not None:
+            pk.set_budget(self.budget_w)     # O(1) when unchanged
+            self.repacks.append_lazy(pk)
+        else:
+            self.repacks.append(self.scheduler.pack(
+                (j.plan for j in self.jobs.values() if j.plan is not None),
+                budget_w=self.budget_w))
+        self.repack_s += perf_counter() - t0

@@ -1,2 +1,4 @@
 from repro.sched.dvfs import FrequencyActuator, SimActuator
-from repro.sched.power_sched import JobPlan, PowerAwareScheduler, ScheduleResult
+from repro.sched.power_sched import (IncrementalPacker, JobPlan,
+                                     PowerAwareScheduler, RepackStats,
+                                     ScheduleResult)

@@ -12,8 +12,9 @@ the session injects its own encoder, and :mod:`repro.store.reports`
 consumes the raw journal dicts directly.
 """
 from .journal import JOURNAL_FILE, EventJournal, JournalRecord
-from .reports import store_report, windowed_report
+from .reports import JournalView, journal_view, store_report, windowed_report
 from .session_store import (
+    ROTATE_EVERY,
     SNAPSHOT_EVERY,
     NoStoreError,
     SessionStore,
@@ -23,10 +24,13 @@ from .snapshots import SNAPSHOT_RETAIN, SnapshotStore
 
 __all__ = [
     "JOURNAL_FILE",
+    "ROTATE_EVERY",
     "SNAPSHOT_EVERY",
     "SNAPSHOT_RETAIN",
     "EventJournal",
     "JournalRecord",
+    "JournalView",
+    "journal_view",
     "NoStoreError",
     "SessionStore",
     "SnapshotStore",

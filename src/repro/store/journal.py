@@ -15,12 +15,25 @@ break — warning and discarding everything from that point on (a corrupt
 record invalidates its successors: they may describe state that was never
 reached).  Re-opening a journal for append truncates the file back to the
 last intact record, so the recovered session and the on-disk tail agree.
+
+Segment rotation bounds the live file for month-long sessions: with
+``rotate_every=k`` the live ``journal.jsonl`` is sealed as
+``journal-<n>.jsonl`` every ``k`` records and a fresh live file starts.
+Sequence numbers run unbroken across segments; ``recover`` reads sealed
+segments in order before the live file, so readers see one continuous
+journal.  Sealed segments are immutable — torn-tail *truncation* only ever
+applies to the live segment.  A damaged sealed segment invalidates its
+successors exactly like a damaged record: recovery stops there, and
+re-opening for append quarantines the unreachable suffix (``.corrupt``
+renames, nothing deleted) and resumes appending from the last intact
+record.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import re
 import time
 import warnings
 from contextlib import contextmanager
@@ -47,16 +60,21 @@ class JournalRecord:
 
 
 class EventJournal:
-    """Append-only JSONL journal with per-record checksums."""
+    """Append-only JSONL journal with per-record checksums and optional
+    record-count segment rotation."""
 
     def __init__(self, path: str, fsync: bool = False,
-                 start_seq: int = 0):
+                 start_seq: int = 0, rotate_every: int | None = None,
+                 segment_records: int = 0, next_segment: int = 1):
         self.path = path
         self.fsync = bool(fsync)
+        self.rotate_every = int(rotate_every) if rotate_every else None
         self._seq = int(start_seq)
         self._fh = None
         self._batch_depth = 0
         self._dirty = False
+        self._segment_records = int(segment_records)
+        self._next_segment = int(next_segment)
 
     @property
     def last_seq(self) -> int:
@@ -67,6 +85,33 @@ class EventJournal:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
             self._fh = open(self.path, "a", encoding="utf-8")
         return self._fh
+
+    # -- segment naming --------------------------------------------------
+    def _segment_path(self, k: int) -> str:
+        return self.segment_path(self.path, k)
+
+    @staticmethod
+    def segment_path(path: str, k: int) -> str:
+        """Sealed-segment name for a live journal ``path``:
+        ``journal.jsonl`` -> ``journal-<k>.jsonl``."""
+        root, ext = os.path.splitext(path)
+        return f"{root}-{k}{ext}"
+
+    @staticmethod
+    def segments(path: str) -> list[tuple[int, str]]:
+        """Sealed segments beside the live journal ``path``, as ``(k,
+        segment_path)`` sorted by seal order (oldest first)."""
+        dirname = os.path.dirname(path) or "."
+        root, ext = os.path.splitext(os.path.basename(path))
+        pat = re.compile(rf"^{re.escape(root)}-(\d+){re.escape(ext)}$")
+        found = []
+        if os.path.isdir(dirname):
+            for name in os.listdir(dirname):
+                m = pat.match(name)
+                if m:
+                    found.append((int(m.group(1)),
+                                  os.path.join(dirname, name)))
+        return sorted(found)
 
     # -- writing ---------------------------------------------------------
     def append(self, kind: str, data: dict, ts: float | None = None) -> int:
@@ -91,7 +136,27 @@ class EventJournal:
             if self.fsync:
                 os.fsync(fh.fileno())
         self._seq = seq
+        self._segment_records += 1
+        if self.rotate_every and self._segment_records >= self.rotate_every:
+            self._rotate()
         return seq
+
+    def _rotate(self) -> None:
+        """Seal the live file as the next numbered segment and start a
+        fresh live journal.  The sealed bytes are flushed (and fsynced,
+        when configured) before the rename, so rotation never weakens
+        durability — even mid-``batch()``."""
+        fh = self._fh
+        if fh is not None:
+            fh.flush()
+            if self.fsync:
+                os.fsync(fh.fileno())
+            fh.close()
+            self._fh = None
+        self._dirty = False
+        os.replace(self.path, self._segment_path(self._next_segment))
+        self._next_segment += 1
+        self._segment_records = 0
 
     @contextmanager
     def batch(self):
@@ -117,13 +182,9 @@ class EventJournal:
 
     # -- recovery --------------------------------------------------------
     @staticmethod
-    def recover(path: str) -> tuple[list[JournalRecord], int]:
-        """Read every intact record, tolerating a damaged tail.
-
-        Returns ``(records, good_bytes)`` where ``good_bytes`` is the byte
-        offset just past the last intact record — the truncation point for
-        re-opening the journal in append mode.  Never raises on damage:
-        torn/corrupt tails produce a ``RuntimeWarning`` and are dropped."""
+    def _scan(path: str, after_seq: int) -> tuple[list[JournalRecord], int]:
+        """One file's intact records (expecting ``after_seq + 1`` first)
+        and the byte offset just past the last intact record."""
         records: list[JournalRecord] = []
         good = 0
         with open(path, "rb") as f:
@@ -134,8 +195,8 @@ class EventJournal:
                 if line.strip():
                     warnings.warn(
                         f"journal {path}: torn record after seq "
-                        f"{records[-1].seq if records else 0} (no trailing "
-                        f"newline); truncating the damaged tail",
+                        f"{records[-1].seq if records else after_seq} (no "
+                        f"trailing newline); truncating the damaged tail",
                         RuntimeWarning)
                 break
             if not line.strip():
@@ -148,15 +209,16 @@ class EventJournal:
                 kind, data, sha = rec["kind"], rec["data"], rec["sha"]
                 if sha != _checksum(seq, ts, kind, data):
                     reason = "checksum mismatch"
-                elif seq != (records[-1].seq if records else 0) + 1:
+                elif seq != (records[-1].seq if records
+                             else after_seq) + 1:
                     reason = f"sequence break (got {seq})"
             except (ValueError, KeyError, TypeError) as e:
                 reason = f"unparseable record ({type(e).__name__})"
             if reason is not None:
                 warnings.warn(
                     f"journal {path}: {reason} after seq "
-                    f"{records[-1].seq if records else 0}; truncating the "
-                    f"damaged tail", RuntimeWarning)
+                    f"{records[-1].seq if records else after_seq}; "
+                    f"truncating the damaged tail", RuntimeWarning)
                 break
             records.append(JournalRecord(seq=seq, ts=ts, kind=kind,
                                          data=data))
@@ -164,16 +226,82 @@ class EventJournal:
         return records, good
 
     @classmethod
-    def open_existing(cls, path: str,
-                      fsync: bool = False) -> tuple["EventJournal",
-                                                    list[JournalRecord]]:
-        """Recover ``path`` and open it for appending: the file is truncated
-        back to its last intact record so new appends extend clean state."""
-        records, good = cls.recover(path)
-        size = os.path.getsize(path)
-        if good < size:
+    def _recover_all(cls, path: str):
+        """Recover sealed segments (in order) then the live file.
+
+        Returns ``(records, live_good, live_count, damage)``: all intact
+        records across segments, the live file's truncation offset, how
+        many of the records came from the live file, and — when a SEALED
+        segment is damaged — ``(k, segment_path, good_bytes, count)`` for
+        it (everything after a sealed-segment wound is unreachable and is
+        dropped, live file included)."""
+        records: list[JournalRecord] = []
+        for k, seg in cls.segments(path):
+            segrecs, good = cls._scan(
+                seg, records[-1].seq if records else 0)
+            records.extend(segrecs)
+            if good < os.path.getsize(seg):
+                warnings.warn(
+                    f"journal segment {seg} is damaged mid-archive; "
+                    f"records after seq "
+                    f"{records[-1].seq if records else 0} (later segments "
+                    f"and the live tail) are unreachable and dropped",
+                    RuntimeWarning)
+                return records, 0, 0, (k, seg, good, len(segrecs))
+        if not os.path.exists(path):
+            return records, 0, 0, None
+        liverecs, good = cls._scan(path,
+                                   records[-1].seq if records else 0)
+        records.extend(liverecs)
+        return records, good, len(liverecs), None
+
+    @classmethod
+    def recover(cls, path: str) -> tuple[list[JournalRecord], int]:
+        """Read every intact record — sealed segments in seal order, then
+        the live file — tolerating a damaged tail.
+
+        Returns ``(records, good_bytes)`` where ``good_bytes`` is the byte
+        offset just past the live file's last intact record — the
+        truncation point for re-opening the journal in append mode (0 when
+        a damaged *sealed* segment made the live file unreachable).  Never
+        raises on damage: torn/corrupt tails produce a ``RuntimeWarning``
+        and are dropped.  Read-only: no file is modified."""
+        records, live_good, _, _ = cls._recover_all(path)
+        return records, live_good
+
+    @classmethod
+    def open_existing(cls, path: str, fsync: bool = False,
+                      rotate_every: int | None = None) \
+            -> tuple["EventJournal", list[JournalRecord]]:
+        """Recover ``path`` (segments included) and open it for appending.
+
+        The live file is truncated back to its last intact record so new
+        appends extend clean state.  If a *sealed* segment is damaged, its
+        unreachable successors (later segments and the old live file) are
+        quarantined under ``.corrupt`` names — bytes renamed, never
+        deleted — and the damaged segment, truncated to its intact prefix,
+        becomes the live journal again."""
+        records, live_good, live_count, damage = cls._recover_all(path)
+        if damage is not None:
+            k, seg, seg_good, seg_count = damage
+            for k2, seg2 in cls.segments(path):
+                if k2 > k:
+                    os.replace(seg2, seg2 + ".corrupt")
+            if os.path.exists(path):
+                os.replace(path, path + ".corrupt")
+            os.replace(seg, path)
             with open(path, "r+b") as f:
-                f.truncate(good)
-        journal = cls(path, fsync=fsync,
-                      start_seq=records[-1].seq if records else 0)
+                f.truncate(seg_good)
+            live_count, next_segment = seg_count, k
+        else:
+            if os.path.exists(path) \
+                    and live_good < os.path.getsize(path):
+                with open(path, "r+b") as f:
+                    f.truncate(live_good)
+            ks = [k for k, _ in cls.segments(path)]
+            next_segment = max(ks) + 1 if ks else 1
+        journal = cls(path, fsync=fsync, rotate_every=rotate_every,
+                      start_seq=records[-1].seq if records else 0,
+                      segment_records=live_count,
+                      next_segment=next_segment)
         return journal, records

@@ -27,6 +27,7 @@ from .journal import JOURNAL_FILE, EventJournal, JournalRecord
 from .snapshots import SnapshotStore
 
 SNAPSHOT_EVERY = 25              # journal records between snapshots
+ROTATE_EVERY = 10_000            # journal records per sealed segment
 
 
 class StoreError(RuntimeError):
@@ -45,11 +46,13 @@ class SessionStore:
     """Write-ahead journal + snapshot cadence for one session directory."""
 
     def __init__(self, path: str, *, encode=None, fsync: bool = False,
-                 snapshot_every: int = SNAPSHOT_EVERY):
+                 snapshot_every: int = SNAPSHOT_EVERY,
+                 rotate_every: int | None = ROTATE_EVERY):
         self.path = path
         self.encode = encode or _identity
         self.capture = None          # zero-arg state capture (session-set)
         self.snapshot_every = max(int(snapshot_every), 1)
+        self.rotate_every = int(rotate_every) if rotate_every else None
         self.snapshots = SnapshotStore(path, fsync=fsync)
         self.journal: EventJournal | None = None
         self._recovered: list[JournalRecord] = []
@@ -60,35 +63,42 @@ class SessionStore:
     # -- opening ---------------------------------------------------------
     @classmethod
     def create(cls, path: str, *, encode=None, fsync: bool = False,
-               snapshot_every: int = SNAPSHOT_EVERY) -> "SessionStore":
+               snapshot_every: int = SNAPSHOT_EVERY,
+               rotate_every: int | None = ROTATE_EVERY) -> "SessionStore":
         """Open ``path`` for a NEW session, extending any existing journal."""
         store = cls(path, encode=encode, fsync=fsync,
-                    snapshot_every=snapshot_every)
+                    snapshot_every=snapshot_every, rotate_every=rotate_every)
         journal_path = os.path.join(path, JOURNAL_FILE)
-        if os.path.exists(journal_path):
+        if os.path.exists(journal_path) \
+                or EventJournal.segments(journal_path):
             store.journal, store._recovered = EventJournal.open_existing(
-                journal_path, fsync=fsync)
+                journal_path, fsync=fsync, rotate_every=store.rotate_every)
         else:
-            store.journal = EventJournal(journal_path, fsync=fsync)
+            store.journal = EventJournal(journal_path, fsync=fsync,
+                                         rotate_every=store.rotate_every)
         return store
 
     @classmethod
     def open_existing(cls, path: str, *, encode=None, fsync: bool = False,
-                      snapshot_every: int = SNAPSHOT_EVERY) -> "SessionStore":
+                      snapshot_every: int = SNAPSHOT_EVERY,
+                      rotate_every: int | None = ROTATE_EVERY) \
+            -> "SessionStore":
         """Open ``path`` for resume.  Raises :class:`NoStoreError` when the
         path holds no store at all, :class:`StoreError` when a store exists
         but every record in it is damaged beyond recovery."""
         journal_path = os.path.join(path, JOURNAL_FILE)
-        if not os.path.isdir(path) or not os.path.exists(journal_path):
+        if not os.path.isdir(path) or not (
+                os.path.exists(journal_path)
+                or EventJournal.segments(journal_path)):
             raise NoStoreError(
                 f"no session store at {path!r}: the directory "
                 f"{'exists but ' if os.path.isdir(path) else 'does not exist and '}"
                 f"holds no {JOURNAL_FILE}. Pass the directory given as the "
                 f"'store' config key of the session you want to resume.")
         store = cls(path, encode=encode, fsync=fsync,
-                    snapshot_every=snapshot_every)
+                    snapshot_every=snapshot_every, rotate_every=rotate_every)
         store.journal, store._recovered = EventJournal.open_existing(
-            journal_path, fsync=fsync)
+            journal_path, fsync=fsync, rotate_every=store.rotate_every)
         if not store._recovered:
             raise StoreError(
                 f"session store at {path!r} is corrupt: {JOURNAL_FILE} "

@@ -30,7 +30,7 @@ def _install_hypothesis_shim() -> None:
         def __init__(self, draw):
             self.draw = draw
 
-    def floats(min_value=0.0, max_value=1.0):
+    def floats(min_value=0.0, max_value=1.0, **_ignored):
         return _Strategy(
             lambda r: float(min_value + (max_value - min_value) * r.random()))
 
@@ -46,6 +46,19 @@ def _install_hypothesis_shim() -> None:
             size = int(r.integers(min_size, max_size + 1))
             return [elements.draw(r) for _ in range(size)]
         return _Strategy(draw)
+
+    def just(value):
+        return _Strategy(lambda r: value)
+
+    def tuples(*strategies):
+        return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+    def one_of(*strategies):
+        strategies = [s for group in strategies
+                      for s in (group if isinstance(group, (list, tuple))
+                                else (group,))]
+        return _Strategy(
+            lambda r: strategies[int(r.integers(len(strategies)))].draw(r))
 
     def given(*strategies):
         def deco(fn):
@@ -71,7 +84,7 @@ def _install_hypothesis_shim() -> None:
     mod = types.ModuleType("hypothesis")
     mod.__doc__ = "pytest-time fallback shim (see tests/conftest.py)"
     st_mod = types.ModuleType("hypothesis.strategies")
-    for f in (floats, integers, sampled_from, lists):
+    for f in (floats, integers, sampled_from, lists, just, tuples, one_of):
         setattr(st_mod, f.__name__, f)
     mod.given = given
     mod.settings = settings

@@ -1,0 +1,431 @@
+"""Incremental packing + bulk admission acceptance (ISSUE 8).
+
+The contracts pinned here:
+
+  * **incremental ≡ full** — an ``IncrementalPacker`` driven by ANY
+    interleaving of insert / remove / replace / budget changes produces a
+    ``ScheduleResult`` byte-identical to ``PowerAwareScheduler.pack`` over
+    the same live population (hypothesis property, the tentpole's
+    correctness bar);
+  * **fleet equivalence** — a controller on the incremental path reaches
+    the same decisions, plans, and repack accounting as one degraded to
+    full re-packs, and the repack history stays readable (lazy
+    materialization: latest entry is a full ``ScheduleResult``, superseded
+    entries collapse to ``RepackStats``);
+  * **submit_many ≡ sequential submit** — identical job ids, placements,
+    decisions, and resume behavior (zero classifier calls), with the whole
+    batch rejected atomically on a bad entry;
+  * the satellites: journal segment rotation (continuous seqs, live-only
+    torn-tail truncation, sealed-damage quarantine, rotation mid-batch)
+    and the fingerprint-keyed columnar report cache.
+"""
+import math
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (DeviceInventory, EventJournal, IncrementalPacker,
+                       JobPlan, MinosSession, PowerAwareScheduler,
+                       ReferenceLibrary, RepackStats, ScheduleResult,
+                       SessionStore, TPUPowerModel, VariabilityModel,
+                       count_classifier_calls, micro_gemm, micro_idle_burst,
+                       micro_spmv_memory, micro_stencil, store_report,
+                       stream_profile_workload, stream_telemetry, to_dict,
+                       windowed_report)
+from repro.store.journal import JOURNAL_FILE
+
+MODEL = TPUPowerModel()
+TDP = MODEL.spec.tdp_w
+FREQS = (0.6, 0.8, 1.0)
+GATES = dict(min_confidence=0.2, min_fraction=0.1, min_spike_samples=50)
+
+# pack() never touches the classifier; a bare scheduler is a pure packer
+SCHED = PowerAwareScheduler(None, 100.0)
+
+
+@pytest.fixture(scope="module")
+def micro_library():
+    return ReferenceLibrary(
+        (stream_profile_workload(s, MODEL, FREQS, TDP, seed=i,
+                                 target_duration=0.5)
+         for i, s in enumerate([micro_gemm(), micro_idle_burst(),
+                                micro_spmv_memory(), micro_stencil()])),
+        built_on="tpu-v5e")
+
+
+def _inventory(spec=None, seed=7):
+    return DeviceInventory.generate(spec or {"tpu-v5e": 3, "tpu-v5p": 2},
+                                    VariabilityModel(), seed=seed)
+
+
+def _telemetry(stream, seed):
+    meta, chunks = stream_telemetry(stream, 1.0, MODEL, seed=seed,
+                                    target_duration=0.5)
+    return meta, list(chunks)          # re-iterable: shareable across runs
+
+
+def _plan(p90, chips=1, name="w", job_id="", nameplate_w=150.0):
+    return JobPlan(name, chips, 1.0, p90, None, nameplate_w=nameplate_w,
+                   job_id=job_id)
+
+
+def _fleet_state(session) -> dict:
+    fleet = session._fleet
+    return {
+        "job_ids": sorted(fleet.jobs),
+        "decisions": {jid: to_dict(j.decision) for jid, j in
+                      fleet.jobs.items() if j.decision is not None},
+        "plans": {jid: to_dict(j.plan) for jid, j in fleet.jobs.items()
+                  if j.plan is not None},
+        "rr": session._rr,
+    }
+
+
+# ---------------------------------------------------------------------------
+# tentpole: incremental ≡ full FFD pack, property-pinned
+# ---------------------------------------------------------------------------
+_P90 = st.one_of(
+    st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
+              allow_infinity=False),
+    st.sampled_from([0.0, 1.0, 96.0, 96.0, 100.0, 250.0, 0.1 + 0.2]))
+_BUDGET = st.one_of(
+    st.floats(min_value=-10.0, max_value=2000.0, allow_nan=False,
+              allow_infinity=False),
+    st.sampled_from([0.0, -0.0, math.inf, -math.inf, math.nan]))
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("insert"), _P90, st.integers(1, 8)),
+        st.tuples(st.just("remove"), st.integers(0, 10 ** 6)),
+        st.tuples(st.just("replace"), st.integers(0, 10 ** 6), _P90),
+        st.tuples(st.just("budget"), _BUDGET),
+    ), min_size=1, max_size=50)
+
+
+@settings(max_examples=80, deadline=None)
+@given(_OPS, st.sampled_from([8, 16, 128]))
+def test_incremental_matches_full_pack_under_any_interleaving(ops, bs):
+    """Property: after EVERY mutation the maintained placement equals a
+    from-scratch ``pack()`` — same placed plans in the same order, same
+    deferred names.  Names repeat so FFD ties are exercised; job_ids stay
+    unique (the fleet invariant the packer requires)."""
+    packer = IncrementalPacker(budget_w=500.0, block_size=bs)
+    live, counter = [], 0
+    for op in ops:
+        if op[0] == "insert":
+            plan = _plan(op[1], op[2], name=f"w{counter % 3}",
+                         job_id=f"j{counter}")
+            counter += 1
+            packer.insert(plan)
+            live.append(plan)
+        elif op[0] == "remove":
+            if not live:
+                continue
+            packer.remove(live.pop(op[1] % len(live)))
+        elif op[0] == "replace":
+            if not live:
+                continue
+            i = op[1] % len(live)
+            old = live[i]
+            new = _plan(op[2], old.chips, name=old.name, job_id=old.job_id)
+            packer.replace(old, new)
+            live[i] = new
+        else:
+            packer.set_budget(op[1])
+        ref = SCHED.pack(live, packer.budget_w)
+        got = packer.result()
+        assert [p.job_id for p in got.placed] \
+            == [p.job_id for p in ref.placed]
+        assert got.deferred == ref.deferred
+        assert len(packer) == len(live)
+        stats = packer.stats()
+        assert stats.planned_power_w \
+            == pytest.approx(ref.planned_power_w, rel=1e-12, abs=1e-9)
+        assert stats.nameplate_power_w \
+            == pytest.approx(ref.nameplate_power_w, rel=1e-12, abs=1e-9)
+
+
+def test_packer_rejects_unpackable_plans():
+    packer = IncrementalPacker(budget_w=100.0)
+    plan = _plan(40.0, job_id="a")
+    packer.insert(plan)
+    with pytest.raises(ValueError, match="duplicate packing key"):
+        packer.insert(_plan(40.0, job_id="a"))
+    with pytest.raises(ValueError, match="finite power terms"):
+        packer.insert(_plan(math.inf, job_id="b"))
+    with pytest.raises(KeyError, match="not packed"):
+        packer.remove(_plan(40.0, job_id="ghost"))
+    assert len(packer) == 1                 # failed mutations change nothing
+    assert [p.job_id for p in packer.result().placed] == ["a"]
+    # budget flips that cannot change admissions skip the re-flow entirely
+    v = packer.version
+    packer.set_budget(100.0)
+    assert packer.version == v
+
+
+# ---------------------------------------------------------------------------
+# fleet equivalence: incremental path vs full re-packs, lazy history
+# ---------------------------------------------------------------------------
+def _drive(session):
+    a = session.submit(_telemetry(micro_gemm(), 100), chips=4)
+    a.run()
+    session.submit(_telemetry(micro_spmv_memory(), 101), chips=2)
+    session.submit(_telemetry(micro_stencil(), 102), chips=1)
+    session.set_budget(5000.0)
+    session.run()
+    session.fail_device(a.device.device_id)
+    session.retire(a.job_id)
+    return session
+
+
+def test_incremental_fleet_matches_full_packs(micro_library):
+    inc = MinosSession(micro_library, inventory=_inventory(),
+                       budget_w=20000.0, **GATES)
+    full = MinosSession(micro_library, inventory=_inventory(),
+                        budget_w=20000.0, **GATES)
+    full._fleet._packer = None      # the documented full-re-pack fallback
+    _drive(inc)
+    _drive(full)
+    assert _fleet_state(inc) == _fleet_state(full)
+    ri, rf = inc._fleet.repacks, full._fleet.repacks
+    assert len(ri) == len(rf) > 0
+    for a, b in zip(ri, rf):
+        assert a.budget_w == b.budget_w
+        assert a.planned_power_w == pytest.approx(b.planned_power_w,
+                                                  rel=1e-12, abs=1e-9)
+    # the latest pack is fully materialized on both paths: same placement
+    assert [p.job_id for p in ri[-1].placed] \
+        == [p.job_id for p in rf[-1].placed]
+    assert ri[-1].deferred == rf[-1].deferred
+
+
+def test_repack_history_materializes_lazily(micro_library):
+    session = MinosSession(micro_library, inventory=_inventory(),
+                           budget_w=20000.0, **GATES)
+    session.submit(_telemetry(micro_gemm(), 100), chips=4).run()
+    session.set_budget(5000.0)
+    repacks = session._fleet.repacks
+    assert len(repacks) >= 2
+    last = repacks[-1]
+    assert isinstance(last, ScheduleResult) and last.placed
+    first = repacks[0]                       # superseded by the budget change
+    assert isinstance(first, RepackStats)
+    with pytest.raises(AttributeError, match="superseded"):
+        first.placed
+    assert first.headroom_reclaimed_w \
+        == first.nameplate_power_w - first.planned_power_w
+    # iteration and slicing resolve entries like indexing does
+    assert [r.budget_w for r in repacks][-1] == 5000.0
+    assert isinstance(repacks[-1:][0], ScheduleResult)
+    assert session._fleet.repack_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# bulk admission: submit_many ≡ sequential submit
+# ---------------------------------------------------------------------------
+def _sources():
+    specs = [(micro_gemm(), 4, 100), (micro_spmv_memory(), 2, 101),
+             (micro_stencil(), 1, 102), (micro_gemm(), 2, 103)]
+    return [(_telemetry(s, seed), c) for s, c, seed in specs]
+
+
+def test_submit_many_equals_sequential_submit(micro_library):
+    srcs = _sources()
+    seq = MinosSession(micro_library, inventory=_inventory(),
+                       budget_w=20000.0, **GATES)
+    bulk = MinosSession(micro_library, inventory=_inventory(),
+                        budget_w=20000.0, **GATES)
+    hs = [seq.submit(s, chips=c) for s, c in srcs]
+    hb = bulk.submit_many([s for s, _ in srcs], chips=[c for _, c in srcs])
+    assert [h.job_id for h in hb] == [h.job_id for h in hs]
+    assert [h.device.device_id for h in hb] \
+        == [h.device.device_id for h in hs]
+    seq.run()
+    bulk.run()
+    assert _fleet_state(bulk) == _fleet_state(seq)
+
+
+def test_submit_many_deduplicates_auto_ids(micro_library):
+    session = MinosSession(micro_library,
+                           inventory=_inventory({"tpu-v5e": 1}, seed=3),
+                           budget_w=20000.0, **GATES)
+    src_a, src_b = _telemetry(micro_gemm(), 100), _telemetry(micro_gemm(),
+                                                             104)
+    handles = session.submit_many([src_a, src_b])
+    assert handles[1].job_id == f"{handles[0].job_id}#2"
+
+
+def test_submit_many_rejects_batch_atomically(micro_library):
+    session = MinosSession(micro_library, inventory=_inventory(),
+                           budget_w=20000.0, **GATES)
+    srcs = [s for s, _ in _sources()[:2]]
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        session.submit_many(srcs, job_ids=["x", "x"])
+    assert not session._fleet.jobs and not session.jobs
+
+
+def test_submit_many_resume_equivalence(micro_library, tmp_path):
+    """Bulk-admitted sessions journal the same durable truth: resume
+    reconstructs every decision and plan with zero classifier calls."""
+    srcs = _sources()
+    path = str(tmp_path / "bulk")
+    session = MinosSession(micro_library, inventory=_inventory(),
+                           budget_w=20000.0, store=path, **GATES)
+    session.submit_many([s for s, _ in srcs], chips=[c for _, c in srcs])
+    session.run()
+    expected = _fleet_state(session)
+    session.close()
+    clf = micro_library.classifier()
+    calls = count_classifier_calls(clf)
+    resumed = MinosSession.resume(path, references=clf)
+    assert calls["n"] == 0
+    assert _fleet_state(resumed) == expected
+    resumed.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: journal segment rotation
+# ---------------------------------------------------------------------------
+def test_rotation_rolls_segments_with_continuous_seqs(tmp_path):
+    jp = str(tmp_path / JOURNAL_FILE)
+    journal = EventJournal(jp, rotate_every=3)
+    for i in range(10):
+        journal.append("tick", {"i": i})
+    journal.close()
+    assert [k for k, _ in EventJournal.segments(jp)] == [1, 2, 3]
+    records, _ = EventJournal.recover(jp)
+    assert [r.seq for r in records] == list(range(1, 11))
+    assert [r.data["i"] for r in records] == list(range(10))
+    # reopening keeps rotating where it left off (live file has 1 record)
+    journal2, recovered = EventJournal.open_existing(jp, rotate_every=3)
+    assert len(recovered) == 10
+    for i in range(10, 14):
+        journal2.append("tick", {"i": i})
+    journal2.close()
+    assert [k for k, _ in EventJournal.segments(jp)] == [1, 2, 3, 4]
+    records2, _ = EventJournal.recover(jp)
+    assert [r.data["i"] for r in records2] == list(range(14))
+
+
+def test_rotation_torn_tail_truncates_live_segment_only(tmp_path):
+    jp = str(tmp_path / JOURNAL_FILE)
+    journal = EventJournal(jp, rotate_every=3)
+    for i in range(7):
+        journal.append("tick", {"i": i})
+    journal.close()
+    sealed_sizes = {seg: os.path.getsize(seg)
+                    for _, seg in EventJournal.segments(jp)}
+    with open(jp, "ab") as f:
+        f.write(b'{"seq": 8, "ts": 0.0, "ki')          # torn live tail
+    with pytest.warns(RuntimeWarning, match="torn"):
+        journal2, recovered = EventJournal.open_existing(jp, rotate_every=3)
+    journal2.close()
+    assert [r.data["i"] for r in recovered] == list(range(7))
+    for seg, size in sealed_sizes.items():             # sealed = untouched
+        assert os.path.getsize(seg) == size
+
+
+def test_sealed_segment_damage_quarantines_suffix(tmp_path):
+    jp = str(tmp_path / JOURNAL_FILE)
+    journal = EventJournal(jp, rotate_every=2)
+    for i in range(7):
+        journal.append("tick", {"i": i})
+    journal.close()                    # segments 1..3 (recs 1-6), live rec 7
+    seg2 = EventJournal.segment_path(jp, 2)
+    seg3 = EventJournal.segment_path(jp, 3)
+    with open(seg2, "rb") as f:
+        lines = f.read().splitlines(keepends=True)
+    with open(seg2, "wb") as f:        # corrupt segment 2's second record
+        f.writelines([lines[0], lines[1].replace(b'"kind"', b'"kinX"', 1)])
+    with pytest.warns(RuntimeWarning):
+        records, good = EventJournal.recover(jp)
+    assert [r.seq for r in records] == [1, 2, 3]       # stops at the wound
+    assert good == 0                   # live file unreachable: no append pt
+    with pytest.warns(RuntimeWarning):
+        journal2, recovered = EventJournal.open_existing(jp, rotate_every=2)
+    assert [r.seq for r in recovered] == [1, 2, 3]
+    # the unreachable suffix is quarantined, never deleted
+    assert os.path.exists(seg3 + ".corrupt")
+    assert os.path.exists(jp + ".corrupt")
+    assert not os.path.exists(seg3)
+    # the truncated damaged segment is the live file again; appends resume
+    assert [k for k, _ in EventJournal.segments(jp)] == [1]
+    assert journal2.append("tick", {"i": 99}) == 4
+    journal2.close()
+    records2, _ = EventJournal.recover(jp)
+    assert [r.seq for r in records2] == [1, 2, 3, 4]
+
+
+def test_rotation_mid_batch_seals_complete_segments(tmp_path):
+    jp = str(tmp_path / JOURNAL_FILE)
+    journal = EventJournal(jp, rotate_every=2)
+    with journal.batch():
+        for i in range(5):
+            journal.append("tick", {"i": i})
+        segs = EventJournal.segments(jp)
+        assert [k for k, _ in segs] == [1, 2]
+        for _, seg in segs:            # sealed mid-batch, yet complete
+            with open(seg, "rb") as f:
+                raw = f.read()
+            assert raw.endswith(b"\n") and raw.count(b"\n") == 2
+    journal.close()
+    records, _ = EventJournal.recover(jp)
+    assert [r.data["i"] for r in records] == list(range(5))
+
+
+def test_session_store_rotation_roundtrip(tmp_path):
+    """SessionStore passes rotate_every through — including the edge where
+    rotation leaves no live file at close (8 records, rotate every 4)."""
+    path = str(tmp_path / "s")
+    store = SessionStore.create(path, rotate_every=4)
+    for i in range(8):
+        store.record("tick", i=i)
+    store.close()
+    assert not os.path.exists(os.path.join(path, JOURNAL_FILE))
+    reopened = SessionStore.open_existing(path, rotate_every=4)
+    assert [r.data["i"] for r in reopened.recovered_records] \
+        == list(range(8))
+    assert reopened.record("tick", i=8) == 9
+    reopened.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: fingerprint-keyed columnar report cache
+# ---------------------------------------------------------------------------
+def _spy_recover(monkeypatch):
+    real, calls = EventJournal.recover, {"n": 0}
+
+    def spy(cls, path):
+        calls["n"] += 1
+        return real(path)
+
+    monkeypatch.setattr(EventJournal, "recover", classmethod(spy))
+    return calls
+
+
+def test_store_report_parses_once_until_journal_changes(tmp_path,
+                                                        monkeypatch):
+    path = str(tmp_path / "s")
+    store = SessionStore.create(path, rotate_every=2)
+    store.record("open", budget_w=900.0)
+    store.record("admit", job_id="a")
+    store.record("decision", job_id="a",
+                 plan={"job_id": "a", "predicted_p90_w": 123.0})
+    calls = _spy_recover(monkeypatch)
+    first = store_report(path, window_s=3600.0)
+    rewindowed = store_report(path, window_s=60.0)     # served from cache
+    assert calls["n"] == 1
+    assert sum(w["admits"] for w in rewindowed) == 1
+    assert first[-1]["planned_w"] == 123.0
+    assert first[-1]["budget_w"] == 900.0
+    # reports agree with the uncached aggregation over the same records
+    assert first == windowed_report(EventJournal.recover.__func__(
+        EventJournal, os.path.join(path, JOURNAL_FILE))[0],
+        window_s=3600.0)
+    assert calls["n"] == 2                             # the explicit call
+    store.record("retire", job_id="a")                 # append -> new print
+    invalidated = store_report(path, window_s=3600.0)
+    assert calls["n"] == 3
+    assert sum(w["retires"] for w in invalidated) == 1
+    store.close()
