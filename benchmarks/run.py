@@ -12,10 +12,10 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_baseline_cmp, bench_binsize, bench_case_study,
                             bench_cdf, bench_chaos, bench_classification,
-                            bench_fleet, bench_fleet_scale, bench_freq_scaling,
-                            bench_holdout, bench_kernels, bench_online_cap,
-                            bench_profiling_throughput, bench_recovery,
-                            bench_roofline, bench_savings)
+                            bench_discovery, bench_fleet, bench_fleet_scale,
+                            bench_freq_scaling, bench_holdout, bench_kernels,
+                            bench_online_cap, bench_profiling_throughput,
+                            bench_recovery, bench_roofline, bench_savings)
 
     print("name,us_per_call,derived")
     failures = []
@@ -23,7 +23,8 @@ def main() -> None:
                 bench_case_study, bench_holdout, bench_baseline_cmp,
                 bench_binsize, bench_savings, bench_kernels, bench_roofline,
                 bench_profiling_throughput, bench_online_cap, bench_fleet,
-                bench_fleet_scale, bench_chaos, bench_recovery):
+                bench_fleet_scale, bench_chaos, bench_recovery,
+                bench_discovery):
         try:
             mod.run()
         except Exception:

@@ -42,6 +42,9 @@ from repro.core.algorithm1 import (FreqSelection, ObjectivePolicy,
                                    select_optimal_freq)
 from repro.core.classify import (FreqPoint, MinosClassifier, WorkloadProfile,
                                  count_classifier_calls)
+from repro.discovery import (DiscoveryController, QuarantinePool,
+                             ShadowEvaluator, stream_profiler,
+                             truth_selection)
 from repro.fleet.controller import FleetCapController, FleetEvent, FleetResult
 from repro.fleet.inventory import (DeviceInstance, DeviceInventory,
                                    VariabilityModel)
@@ -70,7 +73,7 @@ from repro.telemetry.power_model import TPUPowerModel
 from repro.telemetry.simulator import (SimTrace, TelemetryChunk, TraceMeta,
                                        simulate, stream_telemetry)
 from repro.telemetry.workloads import (fleet_job_mix, holdout_streams,
-                                       reference_streams)
+                                       novel_streams, reference_streams)
 
 __all__ = [
     # facade
@@ -99,6 +102,9 @@ __all__ = [
     # durable sessions (repro.store)
     "SessionStore", "EventJournal", "JournalRecord", "SnapshotStore",
     "NoStoreError", "StoreError", "store_report", "windowed_report",
+    # online class discovery (repro.discovery)
+    "DiscoveryController", "QuarantinePool", "ShadowEvaluator",
+    "stream_profiler", "truth_selection",
     # actuation / scheduling
     "FrequencyActuator", "SimActuator", "PowerAwareScheduler",
     # telemetry + workload zoo
@@ -106,5 +112,5 @@ __all__ = [
     "TelemetryChunk", "TraceMeta", "Kernel", "KernelStream", "build_stream",
     "micro_gemm", "micro_idle_burst", "micro_spmv_compute",
     "micro_spmv_memory", "micro_stencil", "micro_vector_search",
-    "reference_streams", "holdout_streams", "fleet_job_mix",
+    "reference_streams", "holdout_streams", "novel_streams", "fleet_job_mix",
 ]

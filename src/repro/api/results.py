@@ -49,6 +49,10 @@ class SessionReport:
     retired: dict[str, CapDecision | None] = field(default_factory=dict)
     events: list = field(default_factory=list)     # FleetEvents, in order
     device_health: dict[str, str] = field(default_factory=dict)
+    # online class-discovery summary (library version, pool depth,
+    # promotions, discovered class names); None on discovery-less sessions
+    # — old serialized reports (without the key) decode unchanged
+    discovery: dict | None = None
 
     @property
     def early_decisions(self) -> int:

@@ -60,7 +60,7 @@ _STRAGGLER_KEYS = ("window", "k", "min_samples")
 _CONFIG_KEYS = frozenset({"library", "devices", "variability", "seed",
                           "objective", "actuator", "quantile", "budget_w",
                           "budget_fraction_of_nameplate", "gates",
-                          "stragglers", "store"})
+                          "stragglers", "store", "discovery"})
 
 
 class JobHandle:
@@ -202,7 +202,8 @@ class MinosSession:
                  budget_w: float = math.inf, objective="powercentric",
                  actuator="sim", quantile="p99",
                  min_confidence: float = 0.3, min_fraction: float = 0.1,
-                 min_spike_samples: int = 50, stragglers=None, store=None):
+                 min_spike_samples: int = 50, stragglers=None, store=None,
+                 discovery=None):
         """``references`` is a ``ReferenceLibrary`` (preferred: warm
         classifier), a ``MinosClassifier``, or a profile list.  ``objective``
         / ``actuator`` / ``quantile`` accept registry names (see
@@ -220,7 +221,18 @@ class MinosSession:
         plan, retirement, budget change, and device-health transition is
         journaled write-ahead — ``MinosSession.resume(path)`` reconstructs
         the session after a crash with zero classifier calls.  Without a
-        store every code path is byte-identical to the store-less session."""
+        store every code path is byte-identical to the store-less session.
+
+        ``discovery`` opts into online class discovery: pass ``True``
+        (defaults), a knobs dict (see ``repro.discovery.DISCOVERY_KEYS``),
+        or a prebuilt ``DiscoveryController`` — finalized low-margin
+        decisions then quarantine their profiles, periodic re-clustering
+        mints candidate classes, and shadow-vetted promotions publish a new
+        library version the fleet adopts atomically between ticks
+        (``references`` must be a ``ReferenceLibrary``).  Set
+        ``session.discovery.profiler`` to a full-profile callable to enable
+        promotion.  Without a discovery key every code path is
+        byte-identical to the pre-discovery session."""
         self.library = references        # whatever was handed in (may be lib)
         self.inventory = inventory
         self._objective = self._resolve_objective(objective)
@@ -241,6 +253,9 @@ class MinosSession:
         self._actuator_name = actuator if isinstance(actuator, str) else None
         self._library_path = None        # set when built via from_config
         self._store: SessionStore | None = None
+        self._discovery = self._init_discovery(discovery, references)
+        if self._discovery is not None:
+            self._fleet.set_discovery(self._discovery)
         if store is not None:
             self._init_store(store)
 
@@ -277,6 +292,35 @@ class MinosSession:
         raise ValueError(f"stragglers must be True, a StragglerMonitor, or "
                          f"a FleetStragglerAdapter, got {stragglers!r}")
 
+    def _init_discovery(self, discovery, references):
+        """Resolve the ``discovery`` option into a ``DiscoveryController``
+        (or ``None`` — the inert default: no discovery attribute is touched
+        anywhere on the hot paths)."""
+        if discovery is None or discovery is False:
+            return None
+        from repro.discovery import DISCOVERY_KEYS, DiscoveryController
+        if isinstance(discovery, DiscoveryController):
+            return discovery
+        if discovery is True:
+            knobs = {}
+        elif isinstance(discovery, dict):
+            bad = set(discovery) - set(DISCOVERY_KEYS)
+            if bad:
+                raise ValueError(f"unknown discovery keys {sorted(bad)}; "
+                                 f"recognized: {list(DISCOVERY_KEYS)}")
+            knobs = dict(discovery)
+        else:
+            raise ValueError(f"discovery must be True, a knobs dict, or a "
+                             f"DiscoveryController, got {discovery!r}")
+        from repro.pipeline.library import ReferenceLibrary
+        if not isinstance(references, ReferenceLibrary):
+            raise ValueError(
+                "discovery needs the session references to be a "
+                "ReferenceLibrary (promotions version its membership); got "
+                f"{type(references).__name__}")
+        return DiscoveryController(references, objective=self._objective,
+                                   **knobs)
+
     # -- declarative construction ----------------------------------------
     @classmethod
     def from_config(cls, config, references=None) -> "MinosSession":
@@ -300,7 +344,15 @@ class MinosSession:
             degrade-and-drain of devices whose telemetry cadence lags;
           * ``store`` — durable-session directory (must be fresh): every
             mutation is journaled write-ahead so a crashed session can be
-            reconstructed with ``MinosSession.resume(path)``.
+            reconstructed with ``MinosSession.resume(path)``;
+          * ``discovery`` — ``true`` (defaults) or a knobs dict
+            (``quarantine_below`` / ``min_cluster`` / ``cluster_distance``
+            / ``promote_agreement`` / ``recluster_every`` / ``capacity`` /
+            ``min_confidence_gain`` / ``bin_size``): online class discovery
+            — low-margin decisions quarantine, re-clustering mints
+            candidates, shadow-vetted promotions publish new library
+            versions (requires a ``ReferenceLibrary``; attach a profiler
+            via ``session.discovery.profiler`` to enable promotion).
         """
         if isinstance(config, (str, os.PathLike)):
             text = str(config)
@@ -374,7 +426,8 @@ class MinosSession:
                       objective=config.get("objective", "powercentric"),
                       actuator=config.get("actuator", "sim"),
                       quantile=config.get("quantile", "p99"),
-                      stragglers=stragglers, **gates)
+                      stragglers=stragglers,
+                      discovery=config.get("discovery"), **gates)
         if "library" in config:
             session._library_path = str(config["library"])
         if "store" in config:
@@ -405,12 +458,13 @@ class MinosSession:
         reconstructed."""
         store = SessionStore.open_existing(str(path), encode=to_dict,
                                            fsync=fsync)
-        opened = store.recovered_records[0]
-        if opened.kind != "open":
+        opened = store.open_record()
+        if opened is None or opened.kind != "open":
             store.close()
+            kind = "no" if opened is None else repr(opened.kind)
             raise StoreError(
                 f"session store at {str(path)!r} is corrupt: the journal "
-                f"begins with a {opened.kind!r} record instead of the "
+                f"begins with {kind} record instead of the "
                 f"session 'open' record, so the session's construction "
                 f"facts are lost and it cannot be reconstructed.")
         cfg = opened.data
@@ -434,6 +488,7 @@ class MinosSession:
             actuator=cfg.get("actuator") or "sim",
             quantile=cfg.get("quantile", "p99"),
             stragglers=cls._stragglers_from_record(cfg.get("stragglers")),
+            discovery=cfg.get("discovery"),
             **(cfg.get("gates") or {}))
         session._library_path = cfg.get("library")
         state, snap_seq = store.load_snapshot()
@@ -453,6 +508,13 @@ class MinosSession:
         if not fleet.repacks \
                 and any(j.plan is not None for j in fleet.jobs.values()):
             fleet._repack()
+        d = session._discovery
+        if d is not None and d.version > 1:
+            # re-adopt the promoted library version verbatim: a fresh warm
+            # classifier from the replayed membership — pure spike-matrix
+            # adoption, zero classifier queries (replayed decisions were
+            # re-adopted from the journal, never re-derived)
+            fleet.adopt_classifier(d.library)
         session._attach_store(store)
         store.record("resume", last_seq=store.journal.last_seq,
                      snapshot_seq=snap_seq)
@@ -500,7 +562,7 @@ class MinosSession:
         Policies are recorded by registry name — custom objective/actuator/
         quantile *objects* are not serializable, so resume falls back to
         the defaults for any axis that was not name-resolved."""
-        return {
+        rec = {
             "objective": self.objective,
             "actuator": self._actuator_name,
             "quantile": self._quantile_name(),
@@ -512,6 +574,11 @@ class MinosSession:
                 self._fleet.straggler_adapter),
             "library": self._library_path,
         }
+        if self._discovery is not None:
+            # key present only when enabled: discovery-less stores keep
+            # their pre-discovery open-record bytes (inert-by-default)
+            rec["discovery"] = self._discovery.config_record()
+        return rec
 
     def _quantile_name(self):
         q = self._quantile
@@ -557,7 +624,7 @@ class MinosSession:
                 "plan": to_dict(job.plan) if job.plan is not None else None,
                 "needs_reprofile": job.needs_reprofile,
             })
-        return {
+        state = {
             "budget_w": to_dict(fleet.budget_w),
             "jobs": jobs,
             "retired": {job_id: to_dict(d) if d is not None else None
@@ -570,6 +637,11 @@ class MinosSession:
             "dropped": fleet._dropped,
             "rr": self._rr,
         }
+        if self._discovery is not None:
+            # key present only when enabled: discovery-less snapshots keep
+            # their pre-discovery bytes (inert-by-default)
+            state["discovery"] = self._discovery.state_record()
+        return state
 
     def _restore_state(self, state: dict) -> None:
         """Materialize a snapshot: jobs are re-admitted with their recorded
@@ -605,6 +677,8 @@ class MinosSession:
             # final schedule preserves both without storing the whole trail
             fleet.repacks = RepackTrail([from_dict(state["schedule"])]
                                         * max(int(state["repacks"]), 1))
+        if self._discovery is not None and state.get("discovery") is not None:
+            self._discovery.restore(state["discovery"])
 
     def _replay_admit(self, rec: dict) -> None:
         device = device_from_record(rec["device"])
@@ -648,6 +722,24 @@ class MinosSession:
                                         meta_from_record(data["meta"]))
         elif kind == "cursor":
             self._rr = int(data["rr"])
+        elif kind in ("quarantine", "promote", "rollback"):
+            d = self._discovery
+            if d is None:
+                warnings.warn(
+                    f"journal record {rec.seq} is a discovery {kind!r} "
+                    f"record but the resumed session has no discovery "
+                    f"configured; skipping it", RuntimeWarning)
+            elif kind == "quarantine":
+                d.admit_record(data["entry"])
+            elif kind == "promote":
+                # verbatim re-adoption of the promoted membership: rebuilds
+                # the profiles from their journaled records and row-appends
+                # them — zero classifier calls (the fleet's classifier is
+                # re-pointed once, after the full replay)
+                d.adopt_promoted(int(data["version"]), data["profiles"],
+                                 data["consumed"])
+            else:
+                d.rollback()
         else:
             warnings.warn(f"journal record {rec.seq} has unknown kind "
                           f"{kind!r}; skipping it", RuntimeWarning)
@@ -864,6 +956,84 @@ class MinosSession:
         its jobs finished early)."""
         return self._fleet.straggler_adapter
 
+    # -- online class discovery -------------------------------------------
+    @property
+    def discovery(self):
+        """The session's ``DiscoveryController`` (``None`` unless the
+        session was built with a ``discovery`` option).  Set its
+        ``.profiler`` to a full-profile callable — e.g.
+        ``repro.discovery.stream_profiler`` over the streams a production
+        profiling run would target — to enable promotion."""
+        return self._discovery
+
+    def _require_discovery(self):
+        if self._discovery is None:
+            raise ValueError(
+                "this session has no discovery configured; construct it "
+                "with discovery=True (or a knobs dict)")
+        return self._discovery
+
+    def discover(self, force: bool = True) -> dict | None:
+        """Run one re-cluster + shadow-evaluate pass over the quarantine
+        pool now (``force=False`` honours the ``recluster_every`` cadence),
+        and — when at least one candidate passes the shadow gate — promote:
+        journal the promotion write-ahead, publish the next library
+        version, and atomically re-point the whole fleet at it (zero
+        classifier calls on the swap).  Returns a promotion summary dict,
+        or ``None`` when nothing promoted."""
+        d = self._require_discovery()
+        promo = d.propose(force=force)
+        if promo is None:
+            return None
+        return self._adopt_promotion(promo)
+
+    def rollback_discovery(self) -> dict:
+        """Revert the last promotion (N-1): journal the rollback, restore
+        the previous library version, and re-point the fleet at it.  Note
+        that plans built *after* the promotion may reference discovered
+        classes the restored library no longer has; re-costing such a plan
+        (migration, elastic shrink) will fail — roll back before acting on
+        a promotion's decisions, or retire the affected jobs first."""
+        d = self._require_discovery()
+        if d._previous is None:
+            raise ValueError("no previous library version to roll back to")
+        if self._store is not None:
+            self._store.record("rollback", version=d.version - 1)
+        d.rollback()
+        self._fleet.adopt_classifier(d.library)
+        if self._store is not None:
+            self._store.flush_snapshot(force=True)
+        return {"version": d.version, "classes": d.library.names}
+
+    def _maybe_discover(self) -> None:
+        """Between-ticks discovery hook (inert without discovery): runs the
+        re-cluster pass only when the quarantine cadence says it is due."""
+        d = self._discovery
+        if d is None or not d.due():
+            return
+        promo = d.propose()
+        if promo is not None:
+            self._adopt_promotion(promo)
+
+    def _adopt_promotion(self, promo) -> dict:
+        """Journal (write-ahead) + apply a promotion, then swap the fleet's
+        classifier atomically — between ticks, never mid-tick."""
+        d = self._discovery
+        if self._store is not None:
+            self._store.record("promote", version=promo.version,
+                               profiles=promo.profile_records,
+                               consumed=list(promo.consumed))
+        d.apply(promo)
+        self._fleet.adopt_classifier(d.library)
+        if self._store is not None:
+            # a promotion is a version boundary: snapshot it immediately so
+            # a crash right after resumes from the promoted state directly
+            self._store.flush_snapshot(force=True)
+        return {"version": d.version,
+                "classes": [p.name for p in promo.profiles],
+                "consumed": len(promo.consumed),
+                "reports": [r.record() for r in promo.reports]}
+
     def run(self, finalize: bool = True) -> SessionReport:
         """Drain every attached-but-unconsumed telemetry stream through the
         deterministic fleet mux (submit-order interleave), then — with
@@ -877,8 +1047,10 @@ class MinosSession:
                 mux.add_job(h.job_id, h.meta, h._take_chunks())
             for batch in mux.ticks():
                 self._fleet.ingest_tick(batch)
+                self._maybe_discover()       # library swaps between ticks
         if finalize and self._fleet.jobs:
             self._fleet.finalize()
+            self._maybe_discover()
         return self.report()
 
     def report(self) -> SessionReport:
@@ -896,7 +1068,9 @@ class MinosSession:
             chunks_dropped=fleet._dropped,
             retired=dict(self._retired),
             events=list(fleet.events),
-            device_health=fleet.device_health())
+            device_health=fleet.device_health(),
+            discovery=self._discovery.report_record()
+                      if self._discovery is not None else None)
 
     # -- helpers ---------------------------------------------------------
     def _resolve_device(self, device) -> DeviceInstance:

@@ -1,0 +1,65 @@
+"""JSON codec for full workload profiles.
+
+Quarantine and promotion records must carry complete
+:class:`~repro.core.classify.WorkloadProfile` objects through the session
+journal — numpy traces and the per-frequency scaling table included — so a
+crashed session resumes its discovery state with zero classifier calls.
+The generic dataclass codec in ``repro.api.results`` deliberately excludes
+numpy arrays, so profiles get their own record shape here, mirroring the
+on-disk format of ``ReferenceLibrary.save`` (``repr(float)`` keys round-trip
+float64 frequencies exactly, as do JSON float lists for traces).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.classify import FreqPoint, WorkloadProfile
+
+
+def profile_record(profile: WorkloadProfile) -> dict:
+    """Encode a full profile as a JSON-safe dict."""
+    return {
+        "name": profile.name,
+        "tdp": float(profile.tdp),
+        "power_trace": [float(x) for x in np.asarray(profile.power_trace)],
+        "sm_util": float(profile.sm_util),
+        "dram_util": float(profile.dram_util),
+        "exec_time": float(profile.exec_time),
+        "domain": profile.domain,
+        "scaling": {
+            repr(float(f)): {
+                "freq": float(pt.freq),
+                "p90": float(pt.p90),
+                "p95": float(pt.p95),
+                "p99": float(pt.p99),
+                "mean_power": float(pt.mean_power),
+                "exec_time": float(pt.exec_time),
+            }
+            for f, pt in profile.scaling.items()
+        },
+    }
+
+
+def profile_from_record(rec: dict) -> WorkloadProfile:
+    """Rebuild a :class:`WorkloadProfile` from :func:`profile_record`."""
+    scaling = {
+        float(key): FreqPoint(
+            freq=float(pt["freq"]),
+            p90=float(pt["p90"]),
+            p95=float(pt["p95"]),
+            p99=float(pt["p99"]),
+            mean_power=float(pt["mean_power"]),
+            exec_time=float(pt["exec_time"]),
+        )
+        for key, pt in rec.get("scaling", {}).items()
+    }
+    return WorkloadProfile(
+        name=rec["name"],
+        tdp=float(rec["tdp"]),
+        power_trace=np.asarray(rec["power_trace"], dtype=np.float64),
+        sm_util=float(rec["sm_util"]),
+        dram_util=float(rec["dram_util"]),
+        exec_time=float(rec["exec_time"]),
+        scaling=scaling,
+        domain=rec.get("domain", ""),
+    )

@@ -253,6 +253,11 @@ class FleetCapController:
         # durability, every code path byte-identical to the store-less
         # controller
         self.journal = journal
+        # online class discovery (repro.discovery.DiscoveryController),
+        # attached by MinosSession when configured with a discovery key;
+        # None = inert, every code path byte-identical to the pre-discovery
+        # controller
+        self.discovery = None
         self.jobs: dict[str, FleetJob] = {}
         self.repacks = RepackTrail()
         self.events: list[FleetEvent] = []
@@ -281,6 +286,52 @@ class FleetCapController:
         mid-mutation would lose the in-flight record on replay)."""
         if self.journal is not None:
             self.journal.flush_snapshot()
+
+    # -- online class discovery -------------------------------------------
+    def set_discovery(self, discovery) -> None:
+        """Attach a ``DiscoveryController``: every per-job controller's
+        confidence gate gets tapped so finalized low-margin profiles flow
+        into the quarantine pool (journaled write-ahead when a store is
+        attached).  Pass ``None`` to detach."""
+        self.discovery = discovery
+        tap = self._quarantine_tap if discovery is not None else None
+        for job in self.jobs.values():
+            job.controller.quarantine_tap = tap
+
+    def _quarantine_tap(self, profile, decision) -> None:
+        """Gate-tap callback (fires inside ``OnlineCapController._record``):
+        low-margin decisions quarantine their decided profile.  The entry
+        record is journaled *before* the pool admits it, so a crash between
+        the two replays to the identical pool state."""
+        d = self.discovery
+        if d is None or not d.wants(decision):
+            return
+        rec = d.entry_record(profile, decision)
+        self._journal("quarantine", entry=rec)
+        d.admit_record(rec)
+
+    def adopt_classifier(self, references) -> MinosClassifier:
+        """Atomically repoint the whole fleet at a new reference classifier
+        (a discovery promotion or rollback published a new library version):
+        the shared classifier object, the scheduler's name-resolution memos,
+        and every per-job controller swap together, so the batched
+        observation paths (which group by classifier identity) keep seeing
+        ONE shared object.  Call only between ticks — decisions already
+        made keep their cached selections and are never re-derived.
+
+        Zero classifier calls: building a warm classifier from a library is
+        pure matrix adoption, and nothing here queries it."""
+        if isinstance(references, ReferenceLibrary):
+            clf = references.classifier()
+        elif isinstance(references, MinosClassifier):
+            clf = references
+        else:
+            clf = MinosClassifier(list(references))
+        self.clf = clf
+        self.scheduler.adopt_classifier(clf)
+        for job in self.jobs.values():
+            job.controller.clf = clf
+        return clf
 
     # -- builder lifecycle -----------------------------------------------
     def _make_builder(self, meta, tdp: float):
@@ -412,6 +463,8 @@ class FleetCapController:
         controller = OnlineCapController(
             self.clf, objective=self.objective, actuator=actuator,
             device_id=device.device_id, **self._gates)
+        if self.discovery is not None:
+            controller.quarantine_tap = self._quarantine_tap
         self.jobs[spec["job_id"]] = FleetJob(
             job_id=spec["job_id"], device=device, chips=spec["chips"],
             builder=self._make_builder(spec["meta"],

@@ -199,6 +199,14 @@ class OnlineCapController:
         self.device_id = device_id
         self.decisions: list[CapDecision] = []
 
+    # discovery gate tap (class default, so a tap-less controller is
+    # byte-identical to the pre-discovery one): when set — by
+    # FleetCapController.set_discovery — every recorded decision is offered,
+    # with its decided profile, to the quarantine intake.  Replay never
+    # calls _record (decisions are re-adopted verbatim from the journal), so
+    # a resumed session cannot double-quarantine.
+    quarantine_tap = None
+
     def _record(self, profile, builder: ProfileBuilder, sel: FreqSelection,
                 confidence: float, early: bool) -> CapDecision:
         decision = CapDecision(
@@ -209,6 +217,8 @@ class OnlineCapController:
         self.decisions.append(decision)
         if self.actuator is not None:
             self.actuator.set_cap(decision.cap)
+        if self.quarantine_tap is not None:
+            self.quarantine_tap(profile, decision)
         return decision
 
     def observe(self, builder: ProfileBuilder) -> CapDecision | None:

@@ -186,9 +186,20 @@ class PowerAwareScheduler:
         self.objective = self.objective_policy.name
         self.quantile, self._rel = resolve_quantile(quantile)
         # per-(neighbor, cap) relative-power memo: the lookup chain below is
-        # a pure function of the reference set, which is immutable
+        # a pure function of the reference set, which is immutable for the
+        # lifetime of the attached classifier (adopt_classifier resets it)
         self._rel_memo: dict[tuple[str, float], float] = {}
         self._ref_by_name: dict[str, WorkloadProfile] | None = None
+
+    def adopt_classifier(self, clf: MinosClassifier) -> None:
+        """Swap the reference classifier (a discovery promotion/rollback
+        published a new library version) and drop the per-reference memos —
+        they key on neighbor *names*, whose resolution must follow the new
+        membership.  Plans already built keep their cached selections;
+        re-costing them resolves names against the new reference set."""
+        self.clf = clf
+        self._rel_memo.clear()
+        self._ref_by_name = None
 
     def plan_job(self, profile: WorkloadProfile, chips: int,
                  device=None) -> JobPlan:

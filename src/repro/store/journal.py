@@ -27,6 +27,16 @@ successors exactly like a damaged record: recovery stops there, and
 re-opening for append quarantines the unreachable suffix (``.corrupt``
 renames, nothing deleted) and resumes appending from the last intact
 record.
+
+Compaction (``SessionStore.compact``) folds sealed segments whose records
+are fully covered by the retained snapshots into a checksummed *base file*
+(``journal.base.json``): it records the sequence number the surviving
+journal now starts after (``base_seq``), the highest folded segment number
+(``through_segment``), and the session's preserved ``open`` record.
+Recovery chains from ``base_seq`` instead of 0 and skips any segment at or
+below ``through_segment`` (a crash between the base write and the segment
+removal leaves harmless leftovers).  Sequence numbers never restart — the
+journal stays one unbroken sequence, just with a floor.
 """
 from __future__ import annotations
 
@@ -47,6 +57,13 @@ _CANONICAL = dict(sort_keys=True, separators=(",", ":"), allow_nan=False)
 def _checksum(seq: int, ts: float, kind: str, data) -> str:
     body = json.dumps({"seq": seq, "ts": ts, "kind": kind, "data": data},
                       **_CANONICAL)
+    return hashlib.sha256(body.encode()).hexdigest()
+
+
+def _base_checksum(base_seq: int, through_segment: int, open_record) -> str:
+    body = json.dumps({"base_seq": base_seq,
+                       "through_segment": through_segment,
+                       "open": open_record}, **_CANONICAL)
     return hashlib.sha256(body.encode()).hexdigest()
 
 
@@ -75,6 +92,10 @@ class EventJournal:
         self._dirty = False
         self._segment_records = int(segment_records)
         self._next_segment = int(next_segment)
+        # compaction base ({"base_seq", "through_segment", "open"} or None):
+        # set by open_existing from the on-disk base file and updated by
+        # SessionStore.compact when segments fold
+        self.base: dict | None = None
 
     @property
     def last_seq(self) -> int:
@@ -112,6 +133,61 @@ class EventJournal:
                     found.append((int(m.group(1)),
                                   os.path.join(dirname, name)))
         return sorted(found)
+
+    # -- compaction base -------------------------------------------------
+    @staticmethod
+    def base_path(path: str) -> str:
+        """Compaction-base name for a live journal ``path``:
+        ``journal.jsonl`` -> ``journal.base.json``."""
+        root, _ = os.path.splitext(path)
+        return f"{root}.base.json"
+
+    @classmethod
+    def read_base(cls, path: str) -> dict | None:
+        """The journal's compaction base (``None`` when never compacted).
+        A corrupt base file is warned about and treated as absent — the
+        records folded into it are unrecoverable, so downstream recovery
+        will (correctly) fail rather than rebuild partial state."""
+        bp = cls.base_path(path)
+        if not os.path.exists(bp):
+            return None
+        try:
+            with open(bp, encoding="utf-8") as f:
+                payload = json.load(f)
+            base_seq = int(payload["base_seq"])
+            through = int(payload["through_segment"])
+            open_rec = payload["open"]
+            if payload["sha"] != _base_checksum(base_seq, through, open_rec):
+                raise ValueError("checksum mismatch")
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            warnings.warn(
+                f"journal base {bp} is corrupt ({e}); ignoring it — the "
+                f"records compacted into it are lost", RuntimeWarning)
+            return None
+        return {"base_seq": base_seq, "through_segment": through,
+                "open": open_rec}
+
+    @classmethod
+    def write_base(cls, path: str, base_seq: int, through_segment: int,
+                   open_record: dict | None, fsync: bool = False) -> dict:
+        """Atomically persist the compaction base (tmp + ``os.replace``);
+        written BEFORE the folded segments are removed, so a crash between
+        the two leaves skippable leftovers, never a gap."""
+        bp = cls.base_path(path)
+        payload = {"base_seq": int(base_seq),
+                   "through_segment": int(through_segment),
+                   "open": open_record,
+                   "sha": _base_checksum(int(base_seq), int(through_segment),
+                                         open_record)}
+        tmp = bp + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(payload, f, **_CANONICAL)
+            f.flush()
+            if fsync:
+                os.fsync(f.fileno())
+        os.replace(tmp, bp)
+        return {"base_seq": int(base_seq),
+                "through_segment": int(through_segment), "open": open_record}
 
     # -- writing ---------------------------------------------------------
     def append(self, kind: str, data: dict, ts: float | None = None) -> int:
@@ -229,31 +305,38 @@ class EventJournal:
     def _recover_all(cls, path: str):
         """Recover sealed segments (in order) then the live file.
 
-        Returns ``(records, live_good, live_count, damage)``: all intact
-        records across segments, the live file's truncation offset, how
-        many of the records came from the live file, and — when a SEALED
+        Returns ``(records, live_good, live_count, damage, base)``: all
+        intact records across segments, the live file's truncation offset,
+        how many of the records came from the live file, — when a SEALED
         segment is damaged — ``(k, segment_path, good_bytes, count)`` for
         it (everything after a sealed-segment wound is unreachable and is
-        dropped, live file included)."""
+        dropped, live file included), and the compaction base (or None).
+        With a base, recovery chains from ``base_seq`` and segments at or
+        below ``through_segment`` are skipped (compaction leftovers)."""
+        base = cls.read_base(path)
+        base_seq = base["base_seq"] if base else 0
+        folded_k = base["through_segment"] if base else 0
         records: list[JournalRecord] = []
         for k, seg in cls.segments(path):
+            if k <= folded_k:
+                continue            # already folded into the base
             segrecs, good = cls._scan(
-                seg, records[-1].seq if records else 0)
+                seg, records[-1].seq if records else base_seq)
             records.extend(segrecs)
             if good < os.path.getsize(seg):
                 warnings.warn(
                     f"journal segment {seg} is damaged mid-archive; "
                     f"records after seq "
-                    f"{records[-1].seq if records else 0} (later segments "
-                    f"and the live tail) are unreachable and dropped",
-                    RuntimeWarning)
-                return records, 0, 0, (k, seg, good, len(segrecs))
+                    f"{records[-1].seq if records else base_seq} (later "
+                    f"segments and the live tail) are unreachable and "
+                    f"dropped", RuntimeWarning)
+                return records, 0, 0, (k, seg, good, len(segrecs)), base
         if not os.path.exists(path):
-            return records, 0, 0, None
+            return records, 0, 0, None, base
         liverecs, good = cls._scan(path,
-                                   records[-1].seq if records else 0)
+                                   records[-1].seq if records else base_seq)
         records.extend(liverecs)
-        return records, good, len(liverecs), None
+        return records, good, len(liverecs), None, base
 
     @classmethod
     def recover(cls, path: str) -> tuple[list[JournalRecord], int]:
@@ -265,8 +348,9 @@ class EventJournal:
         truncation point for re-opening the journal in append mode (0 when
         a damaged *sealed* segment made the live file unreachable).  Never
         raises on damage: torn/corrupt tails produce a ``RuntimeWarning``
-        and are dropped.  Read-only: no file is modified."""
-        records, live_good, _, _ = cls._recover_all(path)
+        and are dropped.  Read-only: no file is modified.  On a compacted
+        journal only the records after the base floor are returned."""
+        records, live_good, _, _, _ = cls._recover_all(path)
         return records, live_good
 
     @classmethod
@@ -281,7 +365,8 @@ class EventJournal:
         quarantined under ``.corrupt`` names — bytes renamed, never
         deleted — and the damaged segment, truncated to its intact prefix,
         becomes the live journal again."""
-        records, live_good, live_count, damage = cls._recover_all(path)
+        records, live_good, live_count, damage, base = cls._recover_all(path)
+        folded_k = base["through_segment"] if base else 0
         if damage is not None:
             k, seg, seg_good, seg_count = damage
             for k2, seg2 in cls.segments(path):
@@ -298,10 +383,13 @@ class EventJournal:
                     and live_good < os.path.getsize(path):
                 with open(path, "r+b") as f:
                     f.truncate(live_good)
-            ks = [k for k, _ in cls.segments(path)]
-            next_segment = max(ks) + 1 if ks else 1
+            ks = [k for k, _ in cls.segments(path) if k > folded_k]
+            next_segment = (max(ks + [folded_k]) + 1
+                            if (ks or folded_k) else 1)
         journal = cls(path, fsync=fsync, rotate_every=rotate_every,
-                      start_seq=records[-1].seq if records else 0,
+                      start_seq=records[-1].seq if records
+                      else (base["base_seq"] if base else 0),
                       segment_records=live_count,
                       next_segment=next_segment)
+        journal.base = base
         return journal, records

@@ -77,6 +77,35 @@ class SnapshotStore:
         return path
 
     # -- recovery --------------------------------------------------------
+    def _verify(self, seq: int, path: str) -> dict:
+        """Parse + checksum one snapshot file; raises on any damage."""
+        with open(path, encoding="utf-8") as f:
+            payload = json.load(f)
+        state = payload["state"]
+        if payload["sha"] != _checksum(int(payload["seq"]),
+                                       float(payload["ts"]), state):
+            raise ValueError("checksum mismatch")
+        if int(payload["seq"]) != seq:
+            raise ValueError(f"claims seq {payload['seq']}, "
+                             f"file says {seq}")
+        return state
+
+    def intact_seqs(self, max_seq: float | None = None) -> list[int]:
+        """Sequence numbers of every snapshot that verifies, newest first.
+        Corrupt files are silently skipped (no warning — this is a
+        compaction-planning probe, not a recovery path); ``max_seq``
+        filters like ``load_latest``."""
+        out = []
+        for seq, path in self._listing():
+            if max_seq is not None and seq > max_seq:
+                continue
+            try:
+                self._verify(seq, path)
+            except (OSError, ValueError, KeyError, TypeError):
+                continue
+            out.append(seq)
+        return out
+
     def load_latest(self, max_seq: float | None = None) \
             -> tuple[dict | None, int]:
         """The newest *intact* snapshot as ``(state, seq)``.
@@ -93,15 +122,7 @@ class SnapshotStore:
             if max_seq is not None and seq > max_seq:
                 continue
             try:
-                with open(path, encoding="utf-8") as f:
-                    payload = json.load(f)
-                state = payload["state"]
-                if payload["sha"] != _checksum(int(payload["seq"]),
-                                               float(payload["ts"]), state):
-                    raise ValueError("checksum mismatch")
-                if int(payload["seq"]) != seq:
-                    raise ValueError(f"claims seq {payload['seq']}, "
-                                     f"file says {seq}")
+                state = self._verify(seq, path)
             except (OSError, ValueError, KeyError, TypeError) as e:
                 warnings.warn(
                     f"snapshot {path} is corrupt ({e}); falling back to the "

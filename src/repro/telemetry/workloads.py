@@ -46,6 +46,19 @@ _HOLDOUT_CELLS = [
     ("granite-moe-3b-a800m", "train_4k"),
 ]
 
+# Novel families for the online class-discovery evaluation: shapes the
+# shipped reference library has never seen — an encoder-decoder prefill
+# (whisper), an SSM prefill (falcon-mamba), a sparse-MoE prefill (granite)
+# and a hybrid SSM-MoE prefill (jamba).  Deliberately NOT part of
+# ``reference_streams``: they exist to arrive unannounced from production
+# traffic and be discovered (quarantine -> re-cluster -> promote).
+_NOVEL_CELLS = [
+    ("whisper-medium", "prefill_32k"),
+    ("falcon-mamba-7b", "prefill_32k"),
+    ("granite-moe-3b-a800m", "prefill_32k"),
+    ("jamba-1.5-large-398b", "prefill_32k"),
+]
+
 
 def reference_streams(n_chips: int = 256) -> list[kstream.KernelStream]:
     out = []
@@ -68,6 +81,13 @@ def holdout_streams(n_chips: int = 256) -> list[kstream.KernelStream]:
     return out
 
 
+def novel_streams(n_chips: int = 256) -> list[kstream.KernelStream]:
+    """Workload families outside the shipped reference library (see
+    ``_NOVEL_CELLS``) — the discovery evaluation's unknown arrivals."""
+    return [kstream.build_stream(ARCHS[a], SHAPES[s], n_chips)
+            for a, s in _NOVEL_CELLS]
+
+
 def _mix_weight(name: str) -> int:
     """Sampling weight of a zoo stream in the fleet job mix.  Production
     accelerator fleets are dominated by serving traffic (arXiv:2502.18680),
@@ -83,15 +103,24 @@ def _mix_weight(name: str) -> int:
 
 
 def fleet_job_mix(n_jobs: int, seed: int = 0,
-                  chips_choices=(32, 64, 128, 256)
+                  chips_choices=(32, 64, 128, 256),
+                  include_novel: bool = False
                   ) -> list[tuple[kstream.KernelStream, int]]:
     """A deterministic mix of ``(kernel stream, chip count)`` jobs for fleet
     simulations, sampled (seeded, serving-weighted — see ``_mix_weight``)
     from the reference + holdout zoos — the arrival queue used by
-    ``benchmarks/bench_fleet.py`` and the fleet example."""
+    ``benchmarks/bench_fleet.py`` and the fleet example.
+
+    ``include_novel=True`` extends the sampling pool with the
+    ``novel_streams`` families (the discovery evaluation's unknown
+    arrivals); the default pool — and hence every historical seed's draw
+    sequence — is unchanged."""
     rng = np.random.default_rng(seed)
     pool = [s for s in reference_streams() + holdout_streams()
             for _ in range(_mix_weight(s.name))]
+    if include_novel:
+        pool += [s for s in novel_streams()
+                 for _ in range(_mix_weight(s.name))]
     out = []
     for _ in range(n_jobs):
         stream = pool[int(rng.integers(len(pool)))]

@@ -23,6 +23,7 @@ FACADE_FILES = [
     "benchmarks/bench_online_cap.py",
     "benchmarks/bench_chaos.py",
     "benchmarks/bench_recovery.py",
+    "benchmarks/bench_discovery.py",
 ]
 
 ALLOWED_MODULES = ("repro.api", "repro.fleet")

@@ -606,6 +606,131 @@ def test_journal_batch_preserves_fsync_per_record(tmp_path):
     assert len(records) == 2
 
 
+# ---------------------------------------------------------------------------
+# journal compaction (PR 9 satellite): folded segments, unbroken sequences
+# ---------------------------------------------------------------------------
+def _ticked_store(path, n=40, snapshot_every=5, rotate_every=4,
+                  compact_every=None):
+    store = SessionStore.create(path, snapshot_every=snapshot_every,
+                                rotate_every=rotate_every,
+                                compact_every=compact_every)
+    store.capture = lambda: {"n": store.journal.last_seq}
+    store.record("open", a=1)
+    for i in range(n):
+        store.record("tick", i=i)
+        store.flush_snapshot()
+    return store
+
+
+def test_compact_folds_segments_and_keeps_sequences(tmp_path):
+    path = str(tmp_path / "s")
+    store = _ticked_store(path, compact_every=10)
+    last = store.journal.last_seq
+    base = store.journal.base
+    assert base is not None and base["base_seq"] > 0
+    assert base["open"]["kind"] == "open"         # open record preserved
+    live_segments = [k for k, _ in EventJournal.segments(store.journal.path)]
+    assert live_segments and min(live_segments) > base["through_segment"]
+    store.close()
+    # recovery: one unbroken sequence from the base floor to the tip
+    reopened = SessionStore.open_existing(path)
+    assert reopened.journal.last_seq == last
+    seqs = [r.seq for r in reopened.recovered_records]
+    assert seqs == list(range(base["base_seq"] + 1, last + 1))
+    opened = reopened.open_record()
+    assert opened.kind == "open" and opened.seq == 1
+    assert reopened.load_snapshot()[0] is not None
+    # appends extend the same sequence
+    assert reopened.record("tick", i=99) == last + 1
+    reopened.close()
+
+
+def test_compact_respects_n1_snapshot_fallback(tmp_path):
+    """Nothing folds while fewer than two intact snapshots exist — the N-1
+    fallback must always stay replayable."""
+    store = SessionStore.create(str(tmp_path / "s"), rotate_every=3)
+    for i in range(10):
+        store.record("tick", i=i)
+    assert store.compact() == 0                    # no snapshots at all
+    store.capture = lambda: {"n": store.journal.last_seq}
+    store.flush_snapshot(force=True)
+    assert store.compact() == 0                    # one snapshot: still no
+    store.record("tick", i=10)
+    assert store.compact() >= 1                    # second snapshot -> folds
+    store.close()
+
+
+def test_compact_only_folds_fully_covered_segments(tmp_path):
+    """A segment folds only when the OLDEST retained snapshot sits at or
+    past its last record: restoring the fallback never needs folded data."""
+    path = str(tmp_path / "s")
+    store = _ticked_store(path, n=20, snapshot_every=50, rotate_every=3)
+    store.snapshots.write({"n": 6}, 6)
+    store.snapshots.write({"n": 18}, 18)
+    store.capture = None                # no fresh tip snapshot: pin the floor
+    folded = store.compact()
+    base = store.journal.base
+    assert folded >= 1
+    assert base["base_seq"] == 6                   # floor = oldest snapshot
+    store.close()
+
+
+def test_compact_every_cadence_triggers_automatically(tmp_path):
+    store = _ticked_store(str(tmp_path / "auto"), compact_every=10)
+    assert store.journal.base is not None          # folded without compact()
+    plain = _ticked_store(str(tmp_path / "plain"))
+    assert plain.journal.base is None              # knob off -> no base file
+    store.close()
+    plain.close()
+
+
+def test_compacted_session_resumes_identically(micro_library, tmp_path):
+    """Recovery-equivalence pin: the same scripted session driven through a
+    compacting store and a plain store resumes to the identical state, with
+    zero classifier calls, and the compacted store really shed segments."""
+    from repro.api.results import to_dict as _td
+    paths, states = {}, {}
+    for mode, compact_every in (("plain", None), ("compact", 6)):
+        path = str(tmp_path / mode)
+        store = SessionStore.create(path, encode=_td, snapshot_every=4,
+                                    rotate_every=3,
+                                    compact_every=compact_every)
+        session = MinosSession(micro_library, inventory=_inventory(),
+                               budget_w=20000.0, store=store, **GATES)
+        _drive_scripted(session)
+        session.close()
+        paths[mode] = path
+        resumed, calls = _resume_spied(path, micro_library)
+        assert calls["n"] == 0
+        states[mode] = _state(resumed)
+        resumed.close()
+    assert states["compact"] == states["plain"]
+    assert os.path.exists(EventJournal.base_path(
+        os.path.join(paths["compact"], JOURNAL_FILE)))
+    jp_plain = os.path.join(paths["plain"], JOURNAL_FILE)
+    jp_compact = os.path.join(paths["compact"], JOURNAL_FILE)
+    assert len(EventJournal.segments(jp_compact)) \
+        < len(EventJournal.segments(jp_plain))
+
+
+def test_corrupt_base_file_warns_and_fails_closed(tmp_path):
+    """A damaged base file means the folded records are gone: recovery
+    warns, and a store whose surviving snapshot cannot cover the loss
+    refuses to fabricate state."""
+    path = str(tmp_path / "s")
+    store = _ticked_store(path, compact_every=10)
+    store.close()
+    bp = EventJournal.base_path(os.path.join(path, JOURNAL_FILE))
+    with open(bp, "r+b") as f:
+        f.seek(5)
+        f.write(b"XXXX")
+    with pytest.warns(RuntimeWarning, match="journal base"):
+        with pytest.raises(StoreError, match="no intact records"):
+            # with the base gone, the surviving segments start mid-sequence
+            # and chain to nothing: the store refuses to fabricate state
+            SessionStore.open_existing(path)
+
+
 def test_session_store_batch_delegates_and_snapshots_stay_safe(tmp_path):
     """SessionStore.batch() wraps the journal; a snapshot written mid-batch
     (past the unflushed tail) is skipped by load_snapshot after a crash
