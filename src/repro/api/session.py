@@ -48,7 +48,7 @@ from repro.pipeline.builder import PartialProfile
 from repro.pipeline.online import CapDecision
 from repro.sched.dvfs import FrequencyActuator
 from repro.sched.power_sched import JobPlan
-from repro.store import NoStoreError, SessionStore, StoreError
+from repro.store import NoStoreError, SessionStore, StoreError, kinds
 from repro.telemetry.kernel_stream import KernelStream
 from repro.telemetry.simulator import TelemetryChunk, TraceMeta, \
     stream_telemetry
@@ -459,7 +459,7 @@ class MinosSession:
         store = SessionStore.open_existing(str(path), encode=to_dict,
                                            fsync=fsync)
         opened = store.open_record()
-        if opened is None or opened.kind != "open":
+        if opened is None or opened.kind != kinds.OPEN:
             store.close()
             kind = "no" if opened is None else repr(opened.kind)
             raise StoreError(
@@ -516,7 +516,7 @@ class MinosSession:
             # re-adopted from the journal, never re-derived)
             fleet.adopt_classifier(d.library)
         session._attach_store(store)
-        store.record("resume", last_seq=store.journal.last_seq,
+        store.record(kinds.RESUME, last_seq=store.journal.last_seq,
                      snapshot_seq=snap_seq)
         store.flush_snapshot(force=True)
         return session
@@ -549,7 +549,7 @@ class MinosSession:
                 f"continue it with MinosSession.resume({path!r}) or point "
                 f"'store' at a fresh directory")
         self._attach_store(store)
-        store.record("open", **self._open_record())
+        store.record(kinds.OPEN, **self._open_record())
 
     def _attach_store(self, store: SessionStore) -> None:
         self._store = store
@@ -698,51 +698,52 @@ class MinosSession:
         informational (the deterministic controller logic regenerates the
         identical events), and ``open``/``resume`` are markers."""
         kind, data = rec.kind, rec.data
-        if kind in ("open", "event", "resume"):
-            return
-        if kind == "admit":
-            self._replay_admit(data)
-        elif kind == "decision":
-            job = self._fleet.jobs[data["job_id"]]
-            self._fleet._decide(job, from_dict(data["decision"]),
-                                plan=from_dict(data["plan"]))
-            self._fleet._repack()
-        elif kind == "retire":
-            self.retire(data["job_id"])
-        elif kind == "budget":
-            self._fleet.set_budget(from_dict(data["budget_w"]))
-        elif kind == "fail":
-            self._fleet.fail_device(data["device"])
-        elif kind == "degrade":
-            self._fleet.degrade_device(data["device"])
-        elif kind == "restore":
-            self._fleet.restore_device(data["device"])
-        elif kind == "reprofile":
-            self._fleet.restart_profile(data["job_id"],
-                                        meta_from_record(data["meta"]))
-        elif kind == "cursor":
-            self._rr = int(data["rr"])
-        elif kind in ("quarantine", "promote", "rollback"):
-            d = self._discovery
-            if d is None:
-                warnings.warn(
-                    f"journal record {rec.seq} is a discovery {kind!r} "
-                    f"record but the resumed session has no discovery "
-                    f"configured; skipping it", RuntimeWarning)
-            elif kind == "quarantine":
-                d.admit_record(data["entry"])
-            elif kind == "promote":
-                # verbatim re-adoption of the promoted membership: rebuilds
-                # the profiles from their journaled records and row-appends
-                # them — zero classifier calls (the fleet's classifier is
-                # re-pointed once, after the full replay)
-                d.adopt_promoted(int(data["version"]), data["profiles"],
-                                 data["consumed"])
-            else:
-                d.rollback()
-        else:
-            warnings.warn(f"journal record {rec.seq} has unknown kind "
-                          f"{kind!r}; skipping it", RuntimeWarning)
+        match kind:
+            case kinds.OPEN | kinds.EVENT | kinds.RESUME:
+                return
+            case kinds.ADMIT:
+                self._replay_admit(data)
+            case kinds.DECISION:
+                job = self._fleet.jobs[data["job_id"]]
+                self._fleet._decide(job, from_dict(data["decision"]),
+                                    plan=from_dict(data["plan"]))
+                self._fleet._repack()
+            case kinds.RETIRE:
+                self.retire(data["job_id"])
+            case kinds.BUDGET:
+                self._fleet.set_budget(from_dict(data["budget_w"]))
+            case kinds.FAIL:
+                self._fleet.fail_device(data["device"])
+            case kinds.DEGRADE:
+                self._fleet.degrade_device(data["device"])
+            case kinds.RESTORE:
+                self._fleet.restore_device(data["device"])
+            case kinds.REPROFILE:
+                self._fleet.restart_profile(data["job_id"],
+                                            meta_from_record(data["meta"]))
+            case kinds.CURSOR:
+                self._rr = int(data["rr"])
+            case kinds.QUARANTINE | kinds.PROMOTE | kinds.ROLLBACK:
+                d = self._discovery
+                if d is None:
+                    warnings.warn(
+                        f"journal record {rec.seq} is a discovery {kind!r} "
+                        f"record but the resumed session has no discovery "
+                        f"configured; skipping it", RuntimeWarning)
+                elif kind == kinds.QUARANTINE:
+                    d.admit_record(data["entry"])
+                elif kind == kinds.PROMOTE:
+                    # verbatim re-adoption of the promoted membership:
+                    # rebuilds the profiles from their journaled records and
+                    # row-appends them — zero classifier calls (the fleet's
+                    # classifier is re-pointed once, after the full replay)
+                    d.adopt_promoted(int(data["version"]), data["profiles"],
+                                     data["consumed"])
+                else:
+                    d.rollback()
+            case _:
+                warnings.warn(f"journal record {rec.seq} has unknown kind "
+                              f"{kind!r}; skipping it", RuntimeWarning)
 
     # -- introspection ---------------------------------------------------
     @property
@@ -804,7 +805,7 @@ class MinosSession:
             # auto-placement advanced the round-robin cursor: journal it
             # (before the admit record) so replayed sessions keep placing
             # later submits on the same devices
-            self._store.record("cursor", rr=self._rr)
+            self._store.record(kinds.CURSOR, rr=self._rr)
         meta, chunks = self._parse_source(source, device, freq, telemetry_kw)
         if job_id is None:
             job_id = self._unique_job_id(f"{meta.name}@{device.device_id}")
@@ -872,7 +873,7 @@ class MinosSession:
             if self._store is not None and self._rr != rr_before:
                 # one cursor record for the whole batch: replay lands the
                 # round-robin exactly where the sequential loop would
-                self._store.record("cursor", rr=self._rr)
+                self._store.record(kinds.CURSOR, rr=self._rr)
             ids = self._fleet.admit_many(admissions)
         handles = []
         for jid, (dev, meta, chunks) in zip(ids, parsed):
@@ -998,7 +999,7 @@ class MinosSession:
         if d._previous is None:
             raise ValueError("no previous library version to roll back to")
         if self._store is not None:
-            self._store.record("rollback", version=d.version - 1)
+            self._store.record(kinds.ROLLBACK, version=d.version - 1)
         d.rollback()
         self._fleet.adopt_classifier(d.library)
         if self._store is not None:
@@ -1020,7 +1021,7 @@ class MinosSession:
         classifier atomically — between ticks, never mid-tick."""
         d = self._discovery
         if self._store is not None:
-            self._store.record("promote", version=promo.version,
+            self._store.record(kinds.PROMOTE, version=promo.version,
                                profiles=promo.profile_records,
                                consumed=list(promo.consumed))
         d.apply(promo)

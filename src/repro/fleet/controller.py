@@ -61,6 +61,7 @@ from repro.pipeline.online import CapDecision, OnlineCapController, \
 from repro.sched.dvfs import SimActuator
 from repro.sched.power_sched import IncrementalPacker, JobPlan, \
     PowerAwareScheduler, RepackStats, ScheduleResult
+from repro.store import kinds
 
 
 class _PendingRepack:
@@ -277,7 +278,7 @@ class FleetCapController:
         by re-running the deterministic controller logic during recovery,
         so replay skips these records — they exist for reports."""
         for ev in events:
-            self._journal("event", event=ev)
+            self._journal(kinds.EVENT, event=ev)
         self.events.extend(events)
 
     def _sync_store(self) -> None:
@@ -307,7 +308,7 @@ class FleetCapController:
         if d is None or not d.wants(decision):
             return
         rec = d.entry_record(profile, decision)
-        self._journal("quarantine", entry=rec)
+        self._journal(kinds.QUARANTINE, entry=rec)
         d.admit_record(rec)
 
     def adopt_classifier(self, references) -> MinosClassifier:
@@ -448,7 +449,7 @@ class FleetCapController:
             # the record payload (dataclasses.asdict over meta/devices) is
             # the expensive part — only build it when a store is attached
             self._journal(
-                "admit", job_id=spec["job_id"],
+                kinds.ADMIT, job_id=spec["job_id"],
                 device=device_record(spec["device"]), chips=spec["chips"],
                 meta=meta_record(spec["meta"]),
                 profile_to_completion=spec["profile_to_completion"],
@@ -664,7 +665,7 @@ class FleetCapController:
             raise ValueError(f"job {job_id!r} already decided; nothing to "
                              f"re-profile")
         meta = meta if meta is not None else job.builder.meta
-        self._journal("reprofile", job_id=job_id, meta=meta_record(meta))
+        self._journal(kinds.REPROFILE, job_id=job_id, meta=meta_record(meta))
         self._replace_builder(job, meta)
         job.needs_reprofile = False
         self._sync_store()
@@ -687,7 +688,7 @@ class FleetCapController:
         retirement never re-classifies anything."""
         if job_id not in self.jobs:    # KeyError on unknown/already-retired
             raise KeyError(job_id)
-        self._journal("retire", job_id=job_id)
+        self._journal(kinds.RETIRE, job_id=job_id)
         job = self.jobs.pop(job_id)
         self._drop_builder(job.builder)
         if job.plan is not None:
@@ -699,7 +700,7 @@ class FleetCapController:
     def set_budget(self, budget_w: float) -> None:
         """Change the shared power budget; re-packs the decided jobs against
         the new ceiling (cached plans only — no re-classification)."""
-        self._journal("budget", budget_w=float(budget_w))
+        self._journal(kinds.BUDGET, budget_w=float(budget_w))
         self.budget_w = float(budget_w)
         if self._has_plans():
             self._repack()
@@ -724,7 +725,7 @@ class FleetCapController:
         Returns this failure's events (also appended to ``self.events``)."""
         inv = self._require_inventory("fail_device")
         inv.get(device_id)                   # KeyError on unknown device
-        self._journal("fail", device=device_id)
+        self._journal(kinds.FAIL, device=device_id)
         inv.mark_failed(device_id)
         self._failed_devices.add(device_id)
         events = self._drain_device(device_id, FleetEvent("fail", device_id))
@@ -740,7 +741,7 @@ class FleetCapController:
         inv = self._require_inventory("degrade_device")
         if inv.health(device_id) != HEALTHY:
             return []
-        self._journal("degrade", device=device_id)
+        self._journal(kinds.DEGRADE, device=device_id)
         inv.mark_degraded(device_id)
         events = self._drain_device(device_id,
                                     FleetEvent("degrade", device_id),
@@ -756,7 +757,7 @@ class FleetCapController:
         placements stay where they are (migration is one-way)."""
         inv = self._require_inventory("restore_device")
         prior = inv.health(device_id)
-        self._journal("restore", device=device_id)
+        self._journal(kinds.RESTORE, device=device_id)
         inv.restore(device_id)
         self._failed_devices.discard(device_id)
         events = [FleetEvent("restore", device_id, detail=f"was {prior}")]
@@ -957,7 +958,7 @@ class FleetCapController:
         replay path's verbatim hand-back)."""
         if plan is None:
             plan = self._plan_for(job, selection=decision.selection)
-        self._journal("decision", job_id=job.job_id, decision=decision,
+        self._journal(kinds.DECISION, job_id=job.job_id, decision=decision,
                       plan=plan)
         job.decision = decision
         self._set_plan(job, plan)

@@ -1,0 +1,38 @@
+"""minoslint — the repo's contract checker.
+
+``python -m repro.lint`` statically enforces the architectural
+invariants the runtime tests pin behaviorally: write-ahead journaling
+(W1xx), journal-record exhaustiveness (W2xx), determinism in the
+byte-identity-pinned packages (W3xx), the package import DAG (W4xx), and
+the float contract of the 1e-9 reference paths (W5xx).  Pure stdlib
+``ast`` — nothing under audit is imported.
+
+See ROADMAP.md § "Checked contracts" for the rule catalogue, and
+:mod:`repro.lint.contracts` for the policy (scopes, allowlists, DAG).
+"""
+from __future__ import annotations
+
+from . import (determinism, floatcontract, layering, record_kinds,
+               writeahead)
+from .core import (Finding, LintContext, SourceFile, load_context,
+                   render_json, render_text, report_dict, run)
+
+#: pass execution order (report order comes from sorting, not this).
+PASSES = (
+    writeahead.run_pass,
+    record_kinds.run_pass,
+    determinism.run_pass,
+    layering.run_pass,
+    floatcontract.run_pass,
+)
+
+#: rule id -> one-line description, for --list-rules and the docs.
+RULES = {}
+for _mod in (writeahead, record_kinds, determinism, layering,
+             floatcontract):
+    RULES.update(_mod.RULES)
+
+__all__ = [
+    "Finding", "LintContext", "SourceFile", "PASSES", "RULES",
+    "load_context", "render_json", "render_text", "report_dict", "run",
+]

@@ -274,7 +274,10 @@ def _grouped(entries):
     groups: dict[tuple, list] = {}
     for entry in entries:
         ctl = entry[1]
-        groups.setdefault((id(ctl.clf), ctl.bin_candidates),
+        # id() keys group by *object identity* within one call only —
+        # never ordered, compared, or serialized (dict insertion order is
+        # first-appearance, which is deterministic given the input order)
+        groups.setdefault((id(ctl.clf), ctl.bin_candidates),  # minoslint: disable=W304
                           []).append(entry)
     return groups.values()
 
@@ -312,8 +315,10 @@ def observe_fleet(pairs) -> list:
     for i, (ctl, builder) in enumerate(pairs):
         eng = getattr(builder, "engine", None)
         if eng is not None and not getattr(builder, "_released", True):
-            by_engine.setdefault(id(eng), []).append(i)
-            engines[id(eng)] = eng
+            # identity grouping within this call only: iteration is in
+            # first-appearance order and keys are never serialized
+            by_engine.setdefault(id(eng), []).append(i)  # minoslint: disable=W304
+            engines[id(eng)] = eng  # minoslint: disable=W304
     for key, ids in by_engine.items():
         eng = engines[key]
         counts = eng.spike_count_batch([pairs[i][1].slot for i in ids])
@@ -375,8 +380,10 @@ def finalize_fleet(pairs) -> list:
     for i, (ctl, builder) in enumerate(pairs):
         eng = getattr(builder, "engine", None)
         if eng is not None and not getattr(builder, "_released", True):
-            by_engine.setdefault(id(eng), []).append(i)
-            engines[id(eng)] = eng
+            # identity grouping within this call only: iteration is in
+            # first-appearance order and keys are never serialized
+            by_engine.setdefault(id(eng), []).append(i)  # minoslint: disable=W304
+            engines[id(eng)] = eng  # minoslint: disable=W304
     for key, ids in by_engine.items():
         profs.update(zip(ids, engines[key].finalize_batch(
             [pairs[i][1].slot for i in ids])))

@@ -200,7 +200,9 @@ class EventJournal:
         per tick; recovery already tolerates a torn batched tail exactly
         like any torn record."""
         seq = self._seq + 1
-        ts = time.time() if ts is None else float(ts)
+        # ts is informational wall-clock metadata, never replayed into
+        # session state; deterministic callers pin it via the parameter
+        ts = time.time() if ts is None else float(ts)  # minoslint: disable=W301
         rec = {"seq": seq, "ts": ts, "kind": str(kind), "data": data}
         rec["sha"] = _checksum(seq, ts, rec["kind"], data)
         fh = self._handle()

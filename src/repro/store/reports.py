@@ -21,6 +21,7 @@ from __future__ import annotations
 import math
 import os
 
+from . import kinds
 from .journal import JOURNAL_FILE, EventJournal, JournalRecord
 
 
@@ -42,15 +43,15 @@ def _fields(record) -> tuple[int, float, str, dict]:
 
 def _digest(kind: str, data: dict):
     """The one value aggregation needs from a record's payload."""
-    if kind in ("open", "budget"):
+    if kind in (kinds.OPEN, kinds.BUDGET):
         return _num(data.get("budget_w"), math.inf)
-    if kind == "decision":
+    if kind == kinds.DECISION:
         plan = data.get("plan") or {}
         return (plan.get("job_id") or data.get("job_id", ""),
                 _num(plan.get("predicted_p90_w")))
-    if kind in ("retire", "reprofile"):
+    if kind in (kinds.RETIRE, kinds.REPROFILE):
         return data.get("job_id", "")
-    if kind == "event":
+    if kind == kinds.EVENT:
         return (data.get("event") or {}).get("kind", "")
     return None
 
@@ -109,31 +110,31 @@ def _aggregate(view: JournalView, window_s: float) -> list[dict]:
             _close(win)
             win = _blank_window(win["end"], win["end"] + window_s)
         win["records"] += 1
-        if kind in ("open", "budget"):
+        if kind in (kinds.OPEN, kinds.BUDGET):
             budget_w = val
-        elif kind == "admit":
+        elif kind == kinds.ADMIT:
             win["admits"] += 1
-        elif kind == "decision":
+        elif kind == kinds.DECISION:
             win["decisions"] += 1
             job_id, p90 = val
             planned[job_id] = p90
-        elif kind == "retire":
+        elif kind == kinds.RETIRE:
             win["retires"] += 1
             planned.pop(val, None)
-        elif kind == "fail":
+        elif kind == kinds.FAIL:
             win["failures"] += 1
-        elif kind == "degrade":
+        elif kind == kinds.DEGRADE:
             win["degrades"] += 1
-        elif kind == "restore":
+        elif kind == kinds.RESTORE:
             win["restores"] += 1
-        elif kind == "event":
+        elif kind == kinds.EVENT:
             if val == "migrate":
                 win["migrations"] += 1
             elif val == "shrink":
                 win["shrinks"] += 1
             elif val == "strand":
                 win["strands"] += 1
-        elif kind == "reprofile":
+        elif kind == kinds.REPROFILE:
             planned.pop(val, None)
     _close(win)
     return windows

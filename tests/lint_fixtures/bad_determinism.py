@@ -1,0 +1,18 @@
+# minoslint: path=src/repro/pipeline/fixture_determinism.py
+"""Known-bad W301-W304 fixture: every classic determinism leak in one
+pinned-module snippet."""
+import random
+import time
+
+import numpy as np
+
+
+def stamp(profiles):
+    started = time.time()                       # W301
+    jitter = np.random.rand(len(profiles))      # W302
+    shuffled = random.random()                  # W302
+    names = list({p.name for p in profiles})    # W303
+    order = {}
+    for i, p in enumerate(profiles):
+        order[id(p)] = i                        # W304
+    return started, jitter, shuffled, names, order

@@ -1,0 +1,9 @@
+# minoslint: path=examples/quickstart.py
+"""Known-bad W402 fixture: a facade file importing past the public
+``repro.api`` / ``repro.fleet`` surface."""
+from repro.api import MinosSession          # fine
+from repro.store.journal import EventJournal  # W402: deep import
+
+
+def main():
+    return MinosSession, EventJournal

@@ -1,0 +1,10 @@
+# minoslint: path=src/repro/sched/fixture_float.py
+"""Known-bad W501/W502 fixture: exact equality against a non-integral
+float literal, and a float32 downcast in a float64 reference module."""
+import numpy as np
+
+
+def decide(margin, trace):
+    if margin == 0.3:                       # W501
+        return None
+    return np.asarray(trace, dtype=np.float32)  # W502

@@ -1,0 +1,9 @@
+# minoslint: path=src/repro/core/fixture_layering.py
+"""Known-bad W401/W403 fixture: ``core`` reaching up into ``api`` (the
+north-star edge the DAG forbids) and into the frozen legacy surface."""
+from repro.api import MinosSession          # W401: core -> api
+from repro.legacy import simulate_workload  # W403 (and not core's edge)
+
+
+def helper():
+    return MinosSession, simulate_workload

@@ -1,0 +1,15 @@
+# minoslint: path=src/repro/pipeline/fixture_determinism.py
+"""Known-good twin of ``bad_determinism.py``: timestamps flow in as
+parameters, RNG is explicitly seeded, set output is sorted, and keys are
+stable identities."""
+import numpy as np
+
+
+def stamp(profiles, started: float, seed: int):
+    rng = np.random.default_rng(seed)
+    jitter = rng.random(len(profiles))
+    names = sorted({p.name for p in profiles})
+    order = {}
+    for i, p in enumerate(profiles):
+        order[p.name] = i
+    return started, jitter, names, order

@@ -1,0 +1,9 @@
+# minoslint: path=examples/quickstart.py
+"""Known-good twin of ``bad_facade.py``: the facade consumes only the
+public surface."""
+from repro.api import MinosSession
+from repro.fleet import FleetCapController
+
+
+def main():
+    return MinosSession, FleetCapController

@@ -1,0 +1,13 @@
+# minoslint: path=src/repro/sched/fixture_float.py
+"""Known-good twin of ``bad_floatcontract.py``: tolerance-based
+comparison, reference math stays in float64 (integral-valued literals
+compare exactly and are allowed)."""
+import math
+
+import numpy as np
+
+
+def decide(margin, trace):
+    if math.isclose(margin, 0.3, rel_tol=1e-9) or margin == 0.0:
+        return None
+    return np.asarray(trace, dtype=np.float64)

@@ -1,0 +1,8 @@
+# minoslint: path=src/repro/core/fixture_layering.py
+"""Known-good twin of ``bad_layering.py``: ``core`` stays on its declared
+DAG edges (kernels, pipeline)."""
+from repro.kernels import spikes            # allowed: core -> kernels
+
+
+def helper():
+    return spikes

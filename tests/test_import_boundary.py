@@ -1,57 +1,82 @@
-"""Import-boundary check for the facade migration (PR 4 satellite).
+"""Import-boundary checks, delegated to the minoslint layering pass.
 
-The entry points migrated onto ``repro.api.MinosSession`` must reach the
-repro package only through the facade surface: ``repro.api`` (and
-``repro.fleet`` for fleet-specific types), importing only names those
-packages actually export.  This keeps the examples/benchmarks honest as
-documentation — if they needed a deep import, the facade would be
-incomplete.  Add files to ``FACADE_FILES`` as they migrate.
+The hand-rolled facade scan this file used to carry (PR 4 satellite) is
+retired: ``repro.lint.contracts`` is now the single source of truth for
+the facade list, the package DAG, and the legacy quarantine, and
+``repro.lint.layering`` is the one engine that walks imports.  This test
+drives that engine over the live tree so the boundary stays enforced in
+plain ``pytest`` runs too (CI additionally runs the full
+``python -m repro.lint`` job).
+
+The runtime half — facade files importing only *public* (``__all__``)
+names, and those names actually resolving — stays here: it needs the
+imported modules, which the static pass never loads.
 """
 import ast
 import os
+from pathlib import Path
 
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from repro.lint import LintContext, SourceFile
+from repro.lint.contracts import FACADE_FILES
+from repro.lint.layering import run_pass
 
-# entry points that have been migrated onto the facade
-FACADE_FILES = [
-    "examples/quickstart.py",
-    "examples/fleet_power_planner.py",
-    "benchmarks/bench_fleet.py",
-    "benchmarks/bench_fleet_scale.py",
-    "benchmarks/bench_online_cap.py",
-    "benchmarks/bench_chaos.py",
-    "benchmarks/bench_recovery.py",
-    "benchmarks/bench_discovery.py",
-]
+REPO = Path(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-ALLOWED_MODULES = ("repro.api", "repro.fleet")
 
+def _load(paths):
+    files = [SourceFile(Path(p).as_posix(), (REPO / p).read_text())
+             for p in paths]
+    return LintContext(files, root=str(REPO))
+
+
+def _tree_paths():
+    out = []
+    for d in ("src/repro", "examples", "benchmarks"):
+        for p in sorted((REPO / d).rglob("*.py")):
+            rel = p.relative_to(REPO).as_posix()
+            if "__pycache__" not in rel:
+                out.append(rel)
+    return out
+
+
+def test_facade_files_exist():
+    missing = [p for p in FACADE_FILES if not (REPO / p).is_file()]
+    assert not missing, f"FACADE_FILES entries not on disk: {missing}"
+
+
+def test_layering_pass_clean_on_tree():
+    """The whole DAG — facade surface (W402), package edges (W401), and
+    the legacy quarantine (W403) — holds on the live tree."""
+    findings = run_pass(_load(_tree_paths()))
+    assert not findings, "\n".join(f.render() for f in findings)
+
+
+def test_layering_pass_catches_deep_facade_import():
+    """Regression for the retired hand-rolled scan: a facade file
+    acquiring a deep import must still fail."""
+    bad = SourceFile(FACADE_FILES[0],
+                     "from repro.store.journal import EventJournal\n")
+    findings = run_pass(LintContext([bad], root=str(REPO)))
+    assert any(f.rule == "W402" for f in findings)
+
+
+def test_layering_pass_catches_core_importing_api():
+    bad = SourceFile("src/repro/core/newmod.py", "import repro.api\n")
+    findings = run_pass(LintContext([bad], root=str(REPO)))
+    assert any(f.rule == "W401" for f in findings)
+
+
+# -- runtime half: public-surface names (needs the imported modules) -----
 
 def _repro_imports(path: str):
-    """Yield (module, names, lineno) for every repro import in ``path``."""
-    with open(os.path.join(REPO, path)) as f:
-        tree = ast.parse(f.read(), filename=path)
+    tree = ast.parse((REPO / path).read_text(), filename=path)
     for node in ast.walk(tree):
-        if isinstance(node, ast.Import):
-            for alias in node.names:
-                if alias.name == "repro" or alias.name.startswith("repro."):
-                    yield alias.name, [], node.lineno
-        elif isinstance(node, ast.ImportFrom):
+        if isinstance(node, ast.ImportFrom):
             mod = node.module or ""
             if mod == "repro" or mod.startswith("repro."):
                 yield mod, [a.name for a in node.names], node.lineno
-
-
-@pytest.mark.parametrize("path", FACADE_FILES)
-def test_facade_files_import_only_api_and_fleet(path):
-    violations = []
-    for mod, names, lineno in _repro_imports(path):
-        if mod not in ALLOWED_MODULES:
-            violations.append(f"{path}:{lineno}: imports {mod!r} "
-                              f"(allowed: {', '.join(ALLOWED_MODULES)})")
-    assert not violations, "\n".join(violations)
 
 
 @pytest.mark.parametrize("path", FACADE_FILES)
